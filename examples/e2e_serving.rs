@@ -1,0 +1,232 @@
+//! End-to-end serving driver (the mandated E2E validation run).
+//!
+//! Loads the VGG-19 artifacts, serves synthetic camera frames at 15 FPS in
+//! REAL TIME through an edge-cloud pipeline while the network toggles
+//! 20 -> 5 -> 20 Mbps, and repartitions with the selected strategy on each
+//! change. Reports latency/throughput/downtime/frame-drop per strategy.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving            # all strategies
+//! cargo run --release --example e2e_serving -- --model mobilenetv2 \
+//!     --fps 15 --period-s 6 --strategy scenario-a-case2
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use neukonfig::clock::Clock;
+use neukonfig::config::ExperimentConfig;
+use neukonfig::coordinator::experiments::ExperimentSetup;
+use neukonfig::coordinator::{
+    EdgeCloudEnv, NetworkMonitor, PauseResume, PlacementCase, Planner, RouteOutcome, ScenarioA,
+    ScenarioB,
+};
+use neukonfig::device::FrameSource;
+use neukonfig::metrics::fmt_duration;
+use neukonfig::netsim::Schedule;
+use neukonfig::profiler::ModelProfile;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Strategy {
+    PauseResume,
+    A1,
+    A2,
+    B1,
+    B2,
+}
+
+impl Strategy {
+    fn label(self) -> &'static str {
+        match self {
+            Strategy::PauseResume => "pause-resume",
+            Strategy::A1 => "scenario-a-case1",
+            Strategy::A2 => "scenario-a-case2",
+            Strategy::B1 => "scenario-b-case1",
+            Strategy::B2 => "scenario-b-case2",
+        }
+    }
+}
+
+fn arg(key: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let model = arg("--model", "vgg19");
+    let fps: f64 = arg("--fps", "15").parse()?;
+    let period_s: u64 = arg("--period-s", "6").parse()?;
+    let only = arg("--strategy", "all");
+
+    let strategies = [
+        Strategy::PauseResume,
+        Strategy::A2,
+        Strategy::B1,
+        Strategy::B2,
+        Strategy::A1,
+    ];
+    let setup = ExperimentSetup::load()?;
+
+    println!(
+        "# E2E serving: {model} @ {fps} FPS, network toggles {}->{}->{} Mbps every {period_s}s\n",
+        setup.cfg.network.high_mbps, setup.cfg.network.low_mbps, setup.cfg.network.high_mbps
+    );
+
+    for strat in strategies {
+        if only != "all" && only != strat.label() {
+            continue;
+        }
+        run_one(&setup, &model, strat, fps, Duration::from_secs(period_s))?;
+    }
+    Ok(())
+}
+
+fn run_one(
+    setup: &ExperimentSetup,
+    model: &str,
+    strategy: Strategy,
+    fps: f64,
+    period: Duration,
+) -> Result<()> {
+    // Realtime clock: sleeps are real, downtime is wall time.
+    let manifest = setup.manifest(model)?;
+    let env = Arc::new(EdgeCloudEnv::new(
+        ExperimentConfig::new(),
+        manifest,
+        Clock::realtime(),
+    )?);
+    let cfg = &env.cfg;
+    let profile: ModelProfile = neukonfig::profiler::default_analytic(&env.manifest);
+    let planner = Planner::new(profile.clone(), cfg.network.latency);
+    let hi = planner.plan(cfg.network.high_mbps).split;
+    let lo = planner.plan(cfg.network.low_mbps).split;
+
+    eprintln!("[{}] deploying (splits {hi}<->{lo})...", strategy.label());
+
+    enum Deployed {
+        P(PauseResume),
+        A(ScenarioA),
+        B(ScenarioB),
+    }
+    let deployed = match strategy {
+        Strategy::PauseResume => Deployed::P(PauseResume::deploy(env.clone(), hi)?),
+        Strategy::A1 => Deployed::A(ScenarioA::deploy(
+            env.clone(),
+            hi,
+            lo,
+            PlacementCase::NewContainer,
+        )?),
+        Strategy::A2 => Deployed::A(ScenarioA::deploy(
+            env.clone(),
+            hi,
+            lo,
+            PlacementCase::SameContainer,
+        )?),
+        Strategy::B1 => Deployed::B(
+            ScenarioB::deploy(env.clone(), hi)?.with_case(PlacementCase::NewContainer),
+        ),
+        Strategy::B2 => Deployed::B(
+            ScenarioB::deploy(env.clone(), hi)?.with_case(PlacementCase::SameContainer),
+        ),
+    };
+    let router = match &deployed {
+        Deployed::P(s) => s.router.clone(),
+        Deployed::A(s) => s.router.clone(),
+        Deployed::B(s) => s.router.clone(),
+    };
+
+    // Network trace: toggle twice (20 -> 5 at t=period, 5 -> 20 at 2*period).
+    let monitor = NetworkMonitor::new(
+        env.link.clone(),
+        Schedule::toggle(cfg.network.high_mbps, cfg.network.low_mbps, period, 2),
+    );
+
+    let total_run = period * 3;
+    let mut cam = FrameSource::new(&env.manifest.input_shape, fps, cfg.seed);
+    let clock = env.clock.clone();
+    let mut downtimes = Vec::new();
+    let started = clock.now();
+
+    // Serving loop: paced frame production, repartition on monitor events.
+    while clock.now() - started < total_run {
+        let now = clock.now() - started;
+        if let Some(change) = monitor.poll(now) {
+            let current = router.active().split;
+            if let Some(plan) = planner.should_repartition(current, change.to_mbps) {
+                eprintln!(
+                    "[{}] t={:.1}s bandwidth {}->{} Mbps: repartition {} -> {}",
+                    strategy.label(),
+                    now.as_secs_f64(),
+                    change.from_mbps,
+                    change.to_mbps,
+                    current,
+                    plan.split
+                );
+                let rec = match &deployed {
+                    Deployed::P(s) => s.repartition(plan.split)?,
+                    Deployed::A(s) => s.switch()?,
+                    Deployed::B(s) => s.repartition(plan.split)?,
+                };
+                eprintln!(
+                    "[{}]   downtime {}",
+                    strategy.label(),
+                    fmt_duration(rec.total)
+                );
+                downtimes.push(rec);
+            }
+        }
+
+        // Produce the frame due now (drop if we're behind schedule).
+        let frame = cam.next_frame();
+        let lit = env.frame_literal(&frame)?;
+        match router.route(&lit) {
+            Ok(RouteOutcome::Processed(_)) => {}
+            Ok(RouteOutcome::DroppedPaused) => {}
+            Err(e) => eprintln!("[{}] route error: {e}", strategy.label()),
+        }
+
+        // Pace to the camera rate.
+        let next_due = frame.captured_at + cam.interval();
+        let now = clock.now() - started;
+        if next_due > now {
+            std::thread::sleep(next_due - now);
+        }
+    }
+
+    let s = router.stats.snapshot();
+    let elapsed = (clock.now() - started).as_secs_f64();
+    let summary = router.latency.summary();
+    println!("## {}", strategy.label());
+    println!(
+        "- frames: {} produced, {} processed, {} dropped ({} during downtime)",
+        s.produced, s.processed, s.dropped, s.dropped_during_downtime
+    );
+    println!(
+        "- throughput: {:.1} frames/s over {elapsed:.1} s",
+        s.processed as f64 / elapsed
+    );
+    if let Some(sum) = summary {
+        println!(
+            "- e2e latency: mean {} p50 {} p95 {} max {}",
+            fmt_duration(Duration::from_secs_f64(sum.mean)),
+            fmt_duration(Duration::from_secs_f64(sum.p50)),
+            fmt_duration(Duration::from_secs_f64(sum.p95)),
+            fmt_duration(Duration::from_secs_f64(sum.max)),
+        );
+    }
+    for (i, d) in downtimes.iter().enumerate() {
+        println!(
+            "- downtime {}: {} (real {}, simulated {})",
+            i + 1,
+            fmt_duration(d.total),
+            fmt_duration(d.real()),
+            fmt_duration(d.simulated)
+        );
+    }
+    println!();
+    Ok(())
+}

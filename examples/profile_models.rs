@@ -1,0 +1,57 @@
+//! Profile both models per layer on the edge and cloud domains and print
+//! the Fig 2 / Fig 3 partition sweeps at 20 and 5 Mbps.
+//!
+//! ```bash
+//! cargo run --release --example profile_models
+//! ```
+
+use anyhow::Result;
+use neukonfig::coordinator::experiments::{partition_sweep, ExperimentSetup};
+use neukonfig::metrics::{fmt_duration, Table};
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let setup = ExperimentSetup::load()?;
+    for model in ["vgg19", "mobilenetv2"] {
+        let env = setup.env(model)?;
+        eprintln!("profiling {model} (real per-layer execution)...");
+        let profile = setup.measured_profile(&env, 5)?;
+
+        let mut t = Table::new(
+            &format!("{model}: per-layer profile"),
+            &["#", "layer", "kind", "edge", "cloud", "out KB"],
+        );
+        for l in &profile.layers {
+            t.row(vec![
+                l.index.to_string(),
+                l.name.clone(),
+                l.kind.clone(),
+                fmt_duration(l.edge_time),
+                fmt_duration(l.cloud_time),
+                format!("{:.1}", l.output_bytes as f64 / 1024.0),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+
+        for bw in [setup.cfg.network.high_mbps, setup.cfg.network.low_mbps] {
+            let rows = partition_sweep(&profile, bw, setup.cfg.network.latency);
+            let mut t = Table::new(
+                &format!("{model}: Eq-1 sweep @ {bw} Mbps"),
+                &["split", "after", "edge", "transfer", "cloud", "total", "opt"],
+            );
+            for r in rows {
+                t.row(vec![
+                    r.split.to_string(),
+                    r.layer,
+                    fmt_duration(Duration::from_secs_f64(r.edge_s)),
+                    fmt_duration(Duration::from_secs_f64(r.transfer_s)),
+                    fmt_duration(Duration::from_secs_f64(r.cloud_s)),
+                    fmt_duration(Duration::from_secs_f64(r.total_s)),
+                    if r.optimal { "<-- optimal".into() } else { String::new() },
+                ]);
+            }
+            println!("{}", t.to_markdown());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: load the AOT artifacts, stand up one edge-cloud pipeline,
+//! and run a few frames through it.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use neukonfig::coordinator::experiments::ExperimentSetup;
+use neukonfig::coordinator::{PauseResume, RouteOutcome};
+use neukonfig::device::FrameSource;
+use neukonfig::metrics::fmt_duration;
+
+fn main() -> Result<()> {
+    // 1. Load the artifact index (built once by `make artifacts`; Python
+    //    never runs again after that).
+    let setup = ExperimentSetup::load()?;
+    println!("models available: {:?}", setup.index.models);
+
+    // 2. Build an edge-cloud environment for MobileNetV2 and deploy a
+    //    pipeline split at the optimum for 20 Mbps.
+    let env = setup.env("mobilenetv2")?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let split = profile.optimal_split(
+        setup.cfg.network.high_mbps,
+        setup.cfg.network.latency,
+        1.0,
+    );
+    println!(
+        "deploying pipeline: edge runs units 0..{split}, cloud runs {split}..{}",
+        env.manifest.num_layers()
+    );
+    let strat = PauseResume::deploy(env.clone(), split)?;
+    let p = strat.router.active();
+    println!(
+        "pipeline up: container start {} + compile {} + weights {}",
+        fmt_duration(p.init_stats.container_start),
+        fmt_duration(p.init_stats.compile),
+        fmt_duration(p.init_stats.weights_upload),
+    );
+
+    // 3. Stream a few camera frames through it.
+    let mut cam = FrameSource::new(&env.manifest.input_shape, 15.0, 42);
+    for _ in 0..5 {
+        let frame = cam.next_frame();
+        let lit = env.frame_literal(&frame)?;
+        match strat.router.route(&lit)? {
+            RouteOutcome::Processed(rep) => {
+                let probs = rep.output.to_vec::<f32>()?;
+                let (top, conf) = probs
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, &p)| (i, p))
+                    .unwrap();
+                println!(
+                    "frame {:>2}: class {top:>3} ({conf:.3})  T_e={} T_t={} T_c={} total={}",
+                    frame.id,
+                    fmt_duration(rep.t_edge),
+                    fmt_duration(rep.t_transfer),
+                    fmt_duration(rep.t_cloud),
+                    fmt_duration(rep.total()),
+                );
+            }
+            RouteOutcome::DroppedPaused => println!("frame {} dropped", frame.id),
+        }
+    }
+
+    let s = strat.router.stats.snapshot();
+    println!(
+        "done: {} produced, {} processed, {} dropped",
+        s.produced, s.processed, s.dropped
+    );
+    Ok(())
+}

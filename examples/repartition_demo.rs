@@ -1,0 +1,101 @@
+//! Side-by-side comparison of all repartitioning approaches on one
+//! network-speed change (simulated clock; real PJRT work).
+//!
+//! ```bash
+//! cargo run --release --example repartition_demo -- --model mobilenetv2
+//! ```
+
+use anyhow::Result;
+use neukonfig::coordinator::experiments::{
+    frame_drop_rows, measure_downtime, Approach, ExperimentSetup,
+};
+use neukonfig::coordinator::PlacementCase;
+use neukonfig::metrics::{fmt_duration, Table};
+use neukonfig::stress::StressProfile;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "mobilenetv2".to_string());
+
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env(&model)?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let cfg = &setup.cfg;
+
+    println!(
+        "# Repartition demo: {model}, {} -> {} Mbps\n",
+        cfg.network.high_mbps, cfg.network.low_mbps
+    );
+
+    let approaches = [
+        Approach::PauseResume,
+        Approach::ScenarioA(PlacementCase::NewContainer),
+        Approach::ScenarioA(PlacementCase::SameContainer),
+        Approach::ScenarioB(PlacementCase::NewContainer),
+        Approach::ScenarioB(PlacementCase::SameContainer),
+    ];
+
+    let mut t = Table::new(
+        "Downtime per approach (paper: 6 s / <1 ms / <1 ms / 1.9 s / 0.6 s)",
+        &["approach", "downtime", "real", "simulated", "phases"],
+    );
+    let mut downtimes = Vec::new();
+    for a in approaches {
+        let rec = measure_downtime(
+            &env,
+            &profile,
+            a,
+            StressProfile::none(),
+            cfg.network.high_mbps,
+            cfg.network.low_mbps,
+        )?
+        .expect("no OOM at full availability");
+        let phases = rec
+            .phases
+            .iter()
+            .map(|(n, d)| format!("{n}={}", fmt_duration(*d)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.row(vec![
+            a.label().to_string(),
+            fmt_duration(rec.total),
+            fmt_duration(rec.real()),
+            fmt_duration(rec.simulated),
+            phases,
+        ]);
+        downtimes.push((a, rec));
+    }
+    println!("{}", t.to_markdown());
+
+    // Frame drops during each approach's downtime at 15 and 30 FPS.
+    let mut t = Table::new(
+        "Frames dropped during the downtime window",
+        &["approach", "fps", "arrivals", "served", "dropped", "drop rate"],
+    );
+    for (a, rec) in &downtimes {
+        for row in frame_drop_rows(
+            &profile,
+            cfg,
+            *a,
+            rec.total,
+            cfg.network.high_mbps,
+            cfg.network.low_mbps,
+            &[15.0, 30.0],
+        ) {
+            t.row(vec![
+                row.approach.to_string(),
+                format!("{:.0}", row.fps),
+                row.outcome.arrivals.to_string(),
+                row.outcome.served.to_string(),
+                row.outcome.dropped.to_string(),
+                format!("{:.2}", row.outcome.drop_rate()),
+            ]);
+        }
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}

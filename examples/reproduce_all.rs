@@ -1,0 +1,188 @@
+//! Regenerate every paper figure and table, writing markdown results to
+//! stdout (redirect into EXPERIMENTS.md sections).
+//!
+//! ```bash
+//! cargo run --release --example reproduce_all > /tmp/results.md
+//! cargo run --release --example reproduce_all -- --quick   # smaller grids
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use neukonfig::coordinator::experiments::{
+    downtime_grid, frame_drop_rows, measure_downtime, partition_sweep, table1_memory, Approach,
+    ExperimentSetup, GridCell,
+};
+use neukonfig::coordinator::PlacementCase;
+use neukonfig::metrics::{fmt_duration, Table};
+use neukonfig::stress::StressProfile;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let setup = ExperimentSetup::load()?;
+    let cfg = setup.cfg.clone();
+
+    println!("# NEUKONFIG reproduction results\n");
+    println!(
+        "Config: {}/{} Mbps, {} ms latency, pipeline {} MB, quick={quick}\n",
+        cfg.network.high_mbps,
+        cfg.network.low_mbps,
+        cfg.network.latency.as_millis(),
+        cfg.memory.pipeline_mb
+    );
+
+    // ---------------- Fig 2 / Fig 3: partition sweeps -------------------
+    for (model, fig) in [("vgg19", "Fig 2"), ("mobilenetv2", "Fig 3")] {
+        let env = setup.env(model)?;
+        eprintln!("[{fig}] profiling {model}...");
+        let profile = setup.measured_profile(&env, if quick { 2 } else { 5 })?;
+        for bw in [cfg.network.high_mbps, cfg.network.low_mbps] {
+            let rows = partition_sweep(&profile, bw, cfg.network.latency);
+            let opt = rows.iter().find(|r| r.optimal).unwrap();
+            let mut t = Table::new(
+                &format!("{fig}: {model} @ {bw} Mbps (optimal split = {} [{}])", opt.split, opt.layer),
+                &["split", "after", "edge ms", "transfer ms", "cloud ms", "total ms", "out KB"],
+            );
+            for r in &rows {
+                t.row(vec![
+                    format!("{}{}", r.split, if r.optimal { "*" } else { "" }),
+                    r.layer.clone(),
+                    format!("{:.1}", r.edge_s * 1e3),
+                    format!("{:.1}", r.transfer_s * 1e3),
+                    format!("{:.1}", r.cloud_s * 1e3),
+                    format!("{:.1}", r.total_s * 1e3),
+                    format!("{:.1}", r.out_kb),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+        }
+    }
+
+    // ------------- Fig 11/12/13: downtime grids -------------------------
+    let model = "mobilenetv2";
+    let env = setup.env(model)?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let approaches: [(Approach, &str, &str); 5] = [
+        (Approach::PauseResume, "Fig 11", "~6 s, flat; empty at 10% mem"),
+        (Approach::ScenarioA(PlacementCase::NewContainer), "Fig 12 (case 1)", "< 0.98 ms"),
+        (Approach::ScenarioA(PlacementCase::SameContainer), "Fig 12 (case 2)", "< 0.98 ms"),
+        (Approach::ScenarioB(PlacementCase::NewContainer), "Fig 13 (case 1)", "~1.9 s"),
+        (Approach::ScenarioB(PlacementCase::SameContainer), "Fig 13 (case 2)", "~0.6 s"),
+    ];
+    for (approach, fig, paper) in approaches {
+        for (from, to, dir) in [
+            (cfg.network.high_mbps, cfg.network.low_mbps, "20->5 Mbps"),
+            (cfg.network.low_mbps, cfg.network.high_mbps, "5->20 Mbps"),
+        ] {
+            eprintln!("[{fig}] {} {dir}...", approach.label());
+            let cells: Vec<GridCell> = if quick {
+                // Corners of the grid only.
+                let mut v = Vec::new();
+                for sp in [
+                    StressProfile::new(0.25, 0.10),
+                    StressProfile::new(0.25, 1.0),
+                    StressProfile::new(1.0, 0.10),
+                    StressProfile::new(1.0, 1.0),
+                ] {
+                    let downtime =
+                        measure_downtime(&env, &profile, approach, sp, from, to)?;
+                    v.push(GridCell {
+                        cpu_avail: sp.cpu_avail,
+                        mem_avail: sp.mem_avail,
+                        downtime,
+                    });
+                }
+                v
+            } else {
+                downtime_grid(&env, &profile, approach, from, to)?
+            };
+            let mut t = Table::new(
+                &format!("{fig}: {} downtime, {dir} (paper: {paper})", approach.label()),
+                &["cpu %", "mem %", "downtime", "real", "simulated"],
+            );
+            for c in &cells {
+                match &c.downtime {
+                    Some(d) => t.row(vec![
+                        format!("{:.0}", c.cpu_avail * 100.0),
+                        format!("{:.0}", c.mem_avail * 100.0),
+                        fmt_duration(d.total),
+                        fmt_duration(d.real()),
+                        fmt_duration(d.simulated),
+                    ]),
+                    None => t.row(vec![
+                        format!("{:.0}", c.cpu_avail * 100.0),
+                        format!("{:.0}", c.mem_avail * 100.0),
+                        "no result (OOM)".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+            println!("{}", t.to_markdown());
+        }
+    }
+
+    // ------------- Fig 14/15: frame drop during downtime ----------------
+    // Use the measured downtimes at full availability.
+    let fps_list = [5.0, 10.0, 15.0, 20.0, 25.0, 30.0];
+    for (bw_from, bw_to, fig) in [
+        (cfg.network.low_mbps, cfg.network.high_mbps, "Fig 14 (@20 Mbps)"),
+        (cfg.network.high_mbps, cfg.network.low_mbps, "Fig 15 (@5 Mbps)"),
+    ] {
+        let mut t = Table::new(
+            &format!("{fig}: frame drop rate during downtime"),
+            &["approach", "downtime", "fps", "arrivals", "served", "dropped", "rate"],
+        );
+        for approach in [
+            Approach::PauseResume,
+            Approach::ScenarioA(PlacementCase::SameContainer),
+            Approach::ScenarioB(PlacementCase::NewContainer),
+            Approach::ScenarioB(PlacementCase::SameContainer),
+        ] {
+            let rec = measure_downtime(
+                &env,
+                &profile,
+                approach,
+                StressProfile::none(),
+                bw_from,
+                bw_to,
+            )?
+            .expect("fits");
+            for row in
+                frame_drop_rows(&profile, &cfg, approach, rec.total, bw_from, bw_to, &fps_list)
+            {
+                t.row(vec![
+                    row.approach.to_string(),
+                    fmt_duration(Duration::from_secs_f64(row.downtime_s)),
+                    format!("{:.0}", row.fps),
+                    row.outcome.arrivals.to_string(),
+                    row.outcome.served.to_string(),
+                    row.outcome.dropped.to_string(),
+                    format!("{:.2}", row.outcome.drop_rate()),
+                ]);
+            }
+        }
+        println!("{}", t.to_markdown());
+    }
+
+    // ------------- Table I: memory -------------------------------------
+    eprintln!("[Table I] memory accounting...");
+    let rows = table1_memory(&setup, model)?;
+    let mut t = Table::new(
+        "Table I: total resources (paper: 763.1 / 1526.2 / 763.1 / 1526.2-transient / 763.1 MB)",
+        &["approach", "initial MB", "additional MB", "peak MB", "transient"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.approach.to_string(),
+            format!("{:.1}", r.initial_mb),
+            format!("{:.1}", r.additional_mb),
+            format!("{:.1}", r.peak_mb),
+            if r.transient { "yes (during switching only)".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    eprintln!("done.");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT compile path: lower every partition unit to HLO text + manifest.
+
+This is the only place Python touches the system; it runs once at build
+time (``make artifacts``) and never on the request path. For each model it
+emits::
+
+    artifacts/<model>/layer_NN.hlo.txt   one HLO module per partition unit
+    artifacts/<model>/weights.bin        flat little-endian f32 parameters
+    artifacts/<model>/manifest.json      shapes / offsets / flops / bytes
+    artifacts/manifest.json              index of models
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla_extension
+0.5.1 bundled with the Rust ``xla`` crate rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .mobilenetv2 import build_mobilenetv2
+from .model import ModelSpec, init_params
+from .vgg import build_vgg19
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    ``return_tuple=False``: each unit returns one plain array, so the Rust
+    side can chain device buffers between layer executables without a
+    tuple-unwrap host readback per layer (EXPERIMENTS.md §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_layer(layer) -> str:
+    x_spec = jax.ShapeDtypeStruct(layer.input_shape, jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in layer.params]
+
+    def unit(x, *params):
+        return layer.apply(x, *params)
+
+    return to_hlo_text(jax.jit(unit).lower(x_spec, *p_specs))
+
+
+def lower_fused(model: ModelSpec, lo: int, hi: int) -> str:
+    """Lower units [lo, hi) as ONE fused HLO module.
+
+    The ablation counterpart to the per-layer export: a fused partition
+    gives XLA a whole-subgraph fusion scope but pins the split point at
+    compile time — repartitioning then requires a fresh compile
+    (rust/benches/ablation_fused.rs measures both sides of the trade).
+    Parameter order: x, then every unit's params in declaration order.
+    """
+    layers = model.layers[lo:hi]
+    x_spec = jax.ShapeDtypeStruct(layers[0].input_shape, jnp.float32)
+    p_specs = [
+        jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        for layer in layers
+        for p in layer.params
+    ]
+
+    def unit(x, *params):
+        i = 0
+        for layer in layers:
+            n = len(layer.params)
+            x = layer.apply(x, *params[i : i + n])
+            i += n
+        return x
+
+    return to_hlo_text(jax.jit(unit).lower(x_spec, *p_specs))
+
+
+def export_fused(model: ModelSpec, mdir: pathlib.Path, splits: list[int]) -> list[dict]:
+    """Export fused edge/cloud partition modules for the given splits."""
+    entries = []
+    n = len(model.layers)
+    for k in splits:
+        entry = {"split": k}
+        if k > 0:
+            name = f"fused_edge_{k:02d}.hlo.txt"
+            (mdir / name).write_text(lower_fused(model, 0, k))
+            entry["edge_hlo"] = name
+        if k < n:
+            name = f"fused_cloud_{k:02d}.hlo.txt"
+            (mdir / name).write_text(lower_fused(model, k, n))
+            entry["cloud_hlo"] = name
+        entries.append(entry)
+        print(f"  [{model.name}] fused split {k}", file=sys.stderr)
+    return entries
+
+
+def export_model(model: ModelSpec, out_root: pathlib.Path, seed: int) -> dict:
+    mdir = out_root / model.name
+    mdir.mkdir(parents=True, exist_ok=True)
+
+    params = init_params(model, seed=seed)
+
+    # weights.bin: concatenation of every unit's params in declaration order.
+    offset = 0
+    manifest_layers = []
+    with open(mdir / "weights.bin", "wb") as wf:
+        for i, (layer, lp) in enumerate(zip(model.layers, params)):
+            pentries = []
+            for spec, arr in zip(layer.params, lp):
+                raw = np.ascontiguousarray(arr, dtype="<f4").tobytes()
+                wf.write(raw)
+                pentries.append(
+                    {
+                        "name": spec.name,
+                        "shape": list(spec.shape),
+                        "offset_bytes": offset,
+                        "size_bytes": len(raw),
+                    }
+                )
+                offset += len(raw)
+
+            hlo_name = f"layer_{i:02d}.hlo.txt"
+            hlo = lower_layer(layer)
+            (mdir / hlo_name).write_text(hlo)
+            manifest_layers.append(
+                {
+                    "index": i,
+                    "name": layer.name,
+                    "kind": layer.kind,
+                    "hlo": hlo_name,
+                    "input_shape": list(layer.input_shape),
+                    "output_shape": list(layer.output_shape),
+                    "output_bytes": layer.output_bytes,
+                    "flops": layer.flops,
+                    "params": pentries,
+                }
+            )
+            print(
+                f"  [{model.name}] {i:2d} {layer.name:12s} {layer.kind:8s} "
+                f"out={layer.output_shape} hlo={len(hlo) // 1024}KiB",
+                file=sys.stderr,
+            )
+
+    # Fused-partition ablation artifacts at the half split.
+    fused = export_fused(model, mdir, [len(model.layers) // 2])
+
+    manifest = {
+        "name": model.name,
+        "input_shape": list(model.input_shape),
+        "weights_bin": "weights.bin",
+        "weights_bytes": offset,
+        "total_flops": model.total_flops,
+        "layers": manifest_layers,
+        "fused": fused,
+    }
+    (mdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+    # Golden output for the Rust runtime's numeric verification: the full
+    # forward pass on a constant 0.5 input.
+    from .model import forward
+
+    x = jnp.full(model.input_shape, 0.5, jnp.float32)
+    y = np.asarray(forward(model, [[jnp.asarray(a) for a in lp] for lp in params], x))
+    golden = {
+        "input_value": 0.5,
+        "output_shape": list(y.shape),
+        "output_sum": float(y.sum()),
+        "output_first8": [float(v) for v in y.flatten()[:8]],
+    }
+    (mdir / "golden.json").write_text(json.dumps(golden, indent=1))
+    return manifest
+
+
+def input_fingerprint() -> str:
+    """Hash of every compile-path source file — lets `make` skip rebuilds."""
+    here = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(here.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower NEUKONFIG models to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--width", type=float, default=0.25, help="channel width multiplier")
+    ap.add_argument("--hw", type=int, default=64, help="input resolution")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--models", default="vgg19,mobilenetv2", help="comma-separated model list"
+    )
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+
+    builders = {
+        "vgg19": lambda: build_vgg19(width=args.width, hw=args.hw),
+        "mobilenetv2": lambda: build_mobilenetv2(width=args.width, hw=args.hw),
+    }
+
+    index = {
+        "width": args.width,
+        "hw": args.hw,
+        "seed": args.seed,
+        "fingerprint": input_fingerprint(),
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        print(f"exporting {name} (width={args.width}, hw={args.hw})", file=sys.stderr)
+        manifest = export_model(builders[name](), out_root, args.seed)
+        index["models"][name] = {
+            "manifest": f"{name}/manifest.json",
+            "layers": len(manifest["layers"]),
+            "weights_bytes": manifest["weights_bytes"],
+        }
+
+    (out_root / "manifest.json").write_text(json.dumps(index, indent=1))
+    print(f"wrote {out_root}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

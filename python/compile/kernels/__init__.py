@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into per-layer HLO by aot.py)."""
+
+from .conv2d import conv2d, pointwise_conv
+from .depthwise import depthwise3x3
+from .fused import bias_act
+from .matmul import matmul
+
+__all__ = ["conv2d", "pointwise_conv", "depthwise3x3", "bias_act", "matmul"]

@@ -1,0 +1,61 @@
+"""L1: 2-D convolution lowered onto the Pallas matmul kernel via im2col.
+
+VGG-19's conv layers (and MobileNetV2's stem) dominate edge-side compute.
+On TPU the natural formulation is im2col + MXU matmul: the patch extraction
+is a cheap gather/reshape the XLA CPU/TPU backend fuses, and the contraction
+runs on the Pallas tiled kernel (``kernels.matmul``).
+
+Layout: NHWC activations, HWIO weights — the JAX/TPU-native layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import matmul as mm
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """Convolution via im2col + Pallas matmul.
+
+    x: (N, H, W, Cin) f32; w: (KH, KW, Cin, Cout) f32 -> (N, Ho, Wo, Cout).
+    """
+    n, h, width, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    if wcin != cin:
+        raise ValueError(f"conv2d channel mismatch: x has {cin}, w has {wcin}")
+
+    # (N, Ho, Wo, KH*KW*Cin) patches; XLA lowers this to a strided gather.
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, ho, wo, patch_dim = patches.shape
+    # conv_general_dilated_patches emits features as Cin-major (C, KH, KW);
+    # reorder the weight to match: (Cin, KH, KW, Cout).
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+    lhs = patches.reshape(n * ho * wo, patch_dim)
+    out = mm.matmul(lhs, wmat)
+    return out.reshape(n, ho, wo, cout)
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 convolution — a pure matmul over the pixel axis.
+
+    x: (N, H, W, Cin); w: (Cin, Cout) -> (N, H, W, Cout). This is the
+    MobileNetV2 expand/project hot path.
+    """
+    n, h, width, cin = x.shape
+    out = mm.matmul(x.reshape(n * h * width, cin), w)
+    return out.reshape(n, h, width, -1)

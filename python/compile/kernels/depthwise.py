@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: 3x3 depthwise convolution (MobileNetV2 hot path).
+
+Depthwise conv has no channel contraction, so im2col+MXU is wasteful; the
+TPU-idiomatic form is a VPU elementwise accumulation over the 9 taps with
+channels on the lane axis. The grid tiles the channel dimension; each grid
+step holds one (1, Hp, Wp, bc) input halo block in VMEM and writes one
+(1, Ho, Wo, bc) output block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _same_pad(dim: int, stride: int, k: int = 3) -> tuple[int, int, int]:
+    """XLA SAME padding: (out_dim, pad_lo, pad_hi)."""
+    out = -(-dim // stride)  # ceil
+    total = max((out - 1) * stride + k - dim, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, ho: int, wo: int, stride: int):
+    # x_ref: (1, Hp, Wp, bc) SAME-padded input halo block
+    # w_ref: (3, 3, bc) taps; o_ref: (1, Ho, Wo, bc)
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            tap = lax.slice(
+                x,
+                (0, di, dj, 0),
+                (1, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, x.shape[3]),
+                (1, stride, stride, 1),
+            )
+            acc += tap * w[di, dj, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bc"))
+def depthwise3x3(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, bc: int | None = None
+) -> jax.Array:
+    """3x3 depthwise convolution, SAME padding (XLA convention).
+
+    x: (1, H, W, C) f32; w: (3, 3, C) f32 -> (1, Ho, Wo, C) with
+    Ho = ceil(H/stride).
+    """
+    n, h, wdt, c = x.shape
+    if n != 1:
+        raise ValueError("depthwise3x3 is specialised for batch 1 (video frames)")
+    if w.shape != (3, 3, c):
+        raise ValueError(f"weight shape {w.shape} != (3, 3, {c})")
+    bc = bc or min(LANE, _round_up(c, 8))
+    cp = _round_up(c, bc)
+
+    ho, plo_h, phi_h = _same_pad(h, stride)
+    wo, plo_w, phi_w = _same_pad(wdt, stride)
+    xp = jnp.pad(
+        x, ((0, 0), (plo_h, phi_h), (plo_w, phi_w), (0, cp - c))
+    ).astype(jnp.float32)
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c))).astype(jnp.float32)
+    hp, wp_dim = xp.shape[1], xp.shape[2]
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, ho=ho, wo=wo, stride=stride),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_dim, bc), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((3, 3, bc), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, bc), lambda i: (0, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, ho, wo, cp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:, :, :, :c]

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+This is the compute hot-spot of both VGG-19 (conv-as-im2col + dense layers)
+and MobileNetV2 (1x1 pointwise convs + classifier). The kernel is written
+TPU-idiomatically — MXU-aligned 128x128 tiles, f32 accumulation in the
+output block across the K grid dimension, VMEM-sized blocks expressed via
+BlockSpec — and lowered with ``interpret=True`` so the XLA CPU backend used
+by the Rust PJRT client can execute it (real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot run; see DESIGN.md §Hardware adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array native tile. Small layers fall back to the padded dim
+# itself (rounded to the f32 sublane requirement) to avoid gross padding
+# waste in interpret mode.
+MXU_TILE = 128
+SUBLANE = 8
+
+
+def _block(dim: int, target: int = MXU_TILE) -> int:
+    """Pick a block size for ``dim``: the MXU tile when the dim is big
+    enough, otherwise the whole (sublane-rounded) dim."""
+    if dim >= target:
+        return target
+    return max(SUBLANE, _round_up(dim, SUBLANE))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # Grid is (M/bm, N/bn, K/bk); the output block index ignores the K
+    # program id, so o_ref is revisited across K steps and accumulates.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """``x @ y`` via the Pallas tiled kernel.
+
+    x: (M, K) f32, y: (K, N) f32 -> (M, N) f32. Inputs are zero-padded to
+    block multiples (zero-padding K contributes nothing to the sum) and the
+    output is sliced back, so arbitrary shapes are accepted.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm = bm or _block(m)
+    bn = bn or _block(n)
+    bk = bk or _block(k)
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))).astype(jnp.float32)
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = MXU_TILE, bn: int = MXU_TILE, bk: int = MXU_TILE) -> int:
+    """Estimated VMEM footprint of one grid step (f32), for DESIGN.md §Perf.
+
+    Three resident blocks (x, y, o); double-buffering of the two inputs on a
+    real TPU doubles their share.
+    """
+    f32 = 4
+    single = (bm * bk + bk * bn + bm * bn) * f32
+    double_buffered = (2 * (bm * bk + bk * bn) + bm * bn) * f32
+    return double_buffered if single else single

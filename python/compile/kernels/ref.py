@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has an entry here implemented only with
+jnp/lax primitives (no Pallas). pytest (python/tests/) asserts allclose
+between kernel and oracle across a hypothesis-driven shape/dtype sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def pointwise_conv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    # (N,H,W,Cin) @ (Cin,Cout) over the channel axis.
+    return jnp.einsum("nhwc,cd->nhwd", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def depthwise3x3_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    c = x.shape[-1]
+    # HWIO with feature_group_count=C: weight (3, 3, 1, C).
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32).reshape(3, 3, 1, c),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def bias_act_ref(x: jax.Array, b: jax.Array, *, act: str = "relu") -> jax.Array:
+    y = x.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

@@ -1,0 +1,79 @@
+"""MobileNetV2 (non-sequential) as block-granular partition units — Fig 3.
+
+MobileNetV2's inverted-residual blocks contain parallel (skip) paths, so
+interior layers are not valid split points; following the paper (§II-A)
+each such region is one block/unit. The unit list is: stem conv, 17
+inverted-residual blocks, the final 1x1 conv, global average pooling, and
+the classifier — 21 units.
+
+Width multiplier (default 0.25, a standard MobileNetV2 alpha) and input
+resolution (default 64) keep CPU-PJRT execution tractable while preserving
+the compute-vs-transfer shape that moves the optimal split point.
+"""
+
+from __future__ import annotations
+
+from .model import (
+    LayerSpec,
+    ModelSpec,
+    conv_unit,
+    dense_unit,
+    gap_unit,
+    invres_unit,
+    make_divisible,
+    pwconv_unit,
+)
+
+# (expansion t, output channels c, repeats n, first-stride s)
+MBV2_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+NUM_CLASSES = 1000
+
+
+def build_mobilenetv2(
+    *, width: float = 0.25, hw: int = 64, num_classes: int | None = None
+) -> ModelSpec:
+    num_classes = num_classes or max(16, int(NUM_CLASSES * width))
+    layers: list[LayerSpec] = []
+
+    shape = (1, hw, hw, 3)
+    stem_c = make_divisible(32 * width)
+    unit = conv_unit("stem", shape, stem_c, stride=2, act="relu6")
+    layers.append(unit)
+    shape = unit.output_shape
+
+    block_i = 0
+    for t, c, n, s in MBV2_CFG:
+        cout = make_divisible(c * width)
+        for rep in range(n):
+            block_i += 1
+            unit = invres_unit(
+                f"block{block_i}",
+                shape,
+                cout,
+                expand=t,
+                stride=s if rep == 0 else 1,
+            )
+            layers.append(unit)
+            shape = unit.output_shape
+
+    head_c = make_divisible(1280 * width)
+    unit = pwconv_unit("head", shape, head_c, act="relu6")
+    layers.append(unit)
+    shape = unit.output_shape
+
+    unit = gap_unit("gap", shape)
+    layers.append(unit)
+    shape = unit.output_shape
+
+    unit = dense_unit("classifier", shape, num_classes, act="none", softmax=True)
+    layers.append(unit)
+
+    return ModelSpec(name="mobilenetv2", input_shape=(1, hw, hw, 3), layers=layers)

@@ -1,0 +1,298 @@
+"""L2: layer-granular JAX model definitions (build-time only).
+
+NEUKONFIG partitions a DNN at a layer boundary and moves the split point at
+runtime. To make every split point a first-class artifact, a model here is a
+list of :class:`LayerSpec` *units* — one per valid partition point (layers
+for VGG-19; blocks for MobileNetV2's parallel regions, following §II-A of
+the paper). ``aot.py`` lowers each unit to its own HLO module; the Rust
+runtime chains unit executables, so repartitioning is just "change the index
+where execution moves from the edge chain to the cloud chain".
+
+Each unit's ``apply`` has signature ``apply(x, *params) -> y`` with all
+parameters as explicit runtime inputs (weights are fed by the Rust side from
+``weights.bin``; baking them as HLO constants would bloat the text format
+and hide the model-load cost the paper measures).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bias_act, conv2d, depthwise3x3, matmul, pointwise_conv
+from .kernels.ref import maxpool2x2_ref
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One partition unit: a layer (VGG) or a block (MobileNetV2)."""
+
+    name: str
+    kind: str  # conv | dense | maxpool | flatten | invres | gap | pwconv
+    apply: Callable[..., jax.Array]
+    params: list[ParamSpec]
+    input_shape: tuple[int, ...]
+    output_shape: tuple[int, ...]
+    flops: int
+
+    @property
+    def output_bytes(self) -> int:
+        return int(np.prod(self.output_shape)) * 4  # f32
+
+    @property
+    def param_bytes(self) -> int:
+        return sum(p.size for p in self.params) * 4
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    input_shape: tuple[int, ...]
+    layers: list[LayerSpec]
+
+    @property
+    def total_flops(self) -> int:
+        return sum(l.flops for l in self.layers)
+
+    @property
+    def total_param_bytes(self) -> int:
+        return sum(l.param_bytes for l in self.layers)
+
+
+def make_divisible(v: float, divisor: int = 8) -> int:
+    """MobileNet channel rounding (keeps channels VPU-lane friendly)."""
+    new_v = max(divisor, int(v + divisor / 2) // divisor * divisor)
+    if new_v < 0.9 * v:
+        new_v += divisor
+    return new_v
+
+
+def init_params(model: ModelSpec, seed: int = 0) -> list[list[np.ndarray]]:
+    """He-initialised (seeded) parameters for every unit.
+
+    The paper uses pre-trained Keras weights; those are unobtainable offline
+    and accuracy is never part of the evaluation, so seeded random weights
+    preserve everything that matters (shapes, bytes, compute). See DESIGN.md
+    §Substitutions.
+    """
+    rng = np.random.default_rng(seed)
+    out: list[list[np.ndarray]] = []
+    for layer in model.layers:
+        lp = []
+        for p in layer.params:
+            if p.name.endswith("_b"):
+                lp.append(np.zeros(p.shape, np.float32))
+            else:
+                fan_in = int(np.prod(p.shape[:-1])) or 1
+                std = math.sqrt(2.0 / fan_in)
+                lp.append(rng.normal(0.0, std, p.shape).astype(np.float32))
+        out.append(lp)
+    return out
+
+
+def forward(
+    model: ModelSpec, params: Sequence[Sequence[jax.Array]], x: jax.Array
+) -> jax.Array:
+    """Full un-partitioned forward pass (test oracle for partition chains)."""
+    for layer, lp in zip(model.layers, params):
+        x = layer.apply(x, *lp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Unit constructors shared by vgg.py / mobilenetv2.py
+# ---------------------------------------------------------------------------
+
+
+def conv_unit(
+    name: str,
+    input_shape: tuple[int, ...],
+    cout: int,
+    *,
+    stride: int = 1,
+    act: str = "relu",
+) -> LayerSpec:
+    n, h, w, cin = input_shape
+    ho, wo = -(-h // stride), -(-w // stride)
+
+    def apply(x, wgt, b):
+        return bias_act(conv2d(x, wgt, stride=stride), b, act=act)
+
+    return LayerSpec(
+        name=name,
+        kind="conv",
+        apply=apply,
+        params=[
+            ParamSpec(f"{name}_w", (3, 3, cin, cout)),
+            ParamSpec(f"{name}_b", (cout,)),
+        ],
+        input_shape=input_shape,
+        output_shape=(n, ho, wo, cout),
+        flops=2 * 9 * cin * cout * ho * wo,
+    )
+
+
+def maxpool_unit(name: str, input_shape: tuple[int, ...]) -> LayerSpec:
+    n, h, w, c = input_shape
+    return LayerSpec(
+        name=name,
+        kind="maxpool",
+        apply=lambda x: maxpool2x2_ref(x),
+        params=[],
+        input_shape=input_shape,
+        output_shape=(n, h // 2, w // 2, c),
+        flops=3 * (h // 2) * (w // 2) * c,
+    )
+
+
+def flatten_unit(name: str, input_shape: tuple[int, ...]) -> LayerSpec:
+    n = input_shape[0]
+    feat = int(np.prod(input_shape[1:]))
+    return LayerSpec(
+        name=name,
+        kind="flatten",
+        apply=lambda x: x.reshape(n, feat),
+        params=[],
+        input_shape=input_shape,
+        output_shape=(n, feat),
+        flops=0,
+    )
+
+
+def dense_unit(
+    name: str,
+    input_shape: tuple[int, ...],
+    out_features: int,
+    *,
+    act: str = "relu",
+    softmax: bool = False,
+) -> LayerSpec:
+    n, feat = input_shape
+
+    def apply(x, wgt, b):
+        y = bias_act(matmul(x, wgt), b, act=act)
+        return jax.nn.softmax(y, axis=-1) if softmax else y
+
+    return LayerSpec(
+        name=name,
+        kind="dense",
+        apply=apply,
+        params=[
+            ParamSpec(f"{name}_w", (feat, out_features)),
+            ParamSpec(f"{name}_b", (out_features,)),
+        ],
+        input_shape=input_shape,
+        output_shape=(n, out_features),
+        flops=2 * feat * out_features,
+    )
+
+
+def gap_unit(name: str, input_shape: tuple[int, ...]) -> LayerSpec:
+    n, h, w, c = input_shape
+    return LayerSpec(
+        name=name,
+        kind="gap",
+        apply=lambda x: jnp.mean(x, axis=(1, 2)),
+        params=[],
+        input_shape=input_shape,
+        output_shape=(n, c),
+        flops=h * w * c,
+    )
+
+
+def invres_unit(
+    name: str,
+    input_shape: tuple[int, ...],
+    cout: int,
+    *,
+    expand: int,
+    stride: int,
+) -> LayerSpec:
+    """MobileNetV2 inverted-residual block as one partition unit.
+
+    The parallel (residual) path means the interior is not a valid split
+    point — the paper treats such regions as blocks (§II-A).
+    """
+    n, h, w, cin = input_shape
+    cmid = cin * expand
+    ho, wo = -(-h // stride), -(-w // stride)
+    use_res = stride == 1 and cin == cout
+
+    params = []
+    if expand != 1:
+        params += [
+            ParamSpec(f"{name}_exp_w", (cin, cmid)),
+            ParamSpec(f"{name}_exp_b", (cmid,)),
+        ]
+    params += [
+        ParamSpec(f"{name}_dw_w", (3, 3, cmid)),
+        ParamSpec(f"{name}_dw_b", (cmid,)),
+    ]
+    params += [
+        ParamSpec(f"{name}_proj_w", (cmid, cout)),
+        ParamSpec(f"{name}_proj_b", (cout,)),
+    ]
+
+    def apply(x, *p):
+        i = 0
+        y = x
+        if expand != 1:
+            y = bias_act(pointwise_conv(y, p[i]), p[i + 1], act="relu6")
+            i += 2
+        y = bias_act(depthwise3x3(y, p[i], stride=stride), p[i + 1], act="relu6")
+        i += 2
+        y = bias_act(pointwise_conv(y, p[i]), p[i + 1], act="none")
+        return x + y if use_res else y
+
+    flops = 0
+    if expand != 1:
+        flops += 2 * cin * cmid * h * w
+    flops += 2 * 9 * cmid * ho * wo
+    flops += 2 * cmid * cout * ho * wo
+
+    return LayerSpec(
+        name=name,
+        kind="invres",
+        apply=apply,
+        params=params,
+        input_shape=input_shape,
+        output_shape=(n, ho, wo, cout),
+        flops=flops,
+    )
+
+
+def pwconv_unit(
+    name: str, input_shape: tuple[int, ...], cout: int, *, act: str = "relu6"
+) -> LayerSpec:
+    n, h, w, cin = input_shape
+
+    def apply(x, wgt, b):
+        return bias_act(pointwise_conv(x, wgt), b, act=act)
+
+    return LayerSpec(
+        name=name,
+        kind="pwconv",
+        apply=apply,
+        params=[
+            ParamSpec(f"{name}_w", (cin, cout)),
+            ParamSpec(f"{name}_b", (cout,)),
+        ],
+        input_shape=input_shape,
+        output_shape=(n, h, w, cout),
+        flops=2 * cin * cout * h * w,
+    )

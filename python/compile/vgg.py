@@ -1,0 +1,66 @@
+"""VGG-19 (sequential) as 25 partition units — mirrors the paper's Fig 2.
+
+Keras VGG-19 has 25 partitionable layers: 16 convs, 5 max-pools, flatten and
+3 dense layers. We keep the exact layer structure and scale the channel
+widths (default 0.25x) and input resolution (default 64x64) so the whole
+model is tractable on the CPU PJRT backend. The *relative* per-layer compute
+and per-layer output sizes — which drive where the optimal split point falls
+and how it moves with network speed — are preserved under uniform scaling
+(DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+from .model import (
+    LayerSpec,
+    ModelSpec,
+    conv_unit,
+    dense_unit,
+    flatten_unit,
+    maxpool_unit,
+)
+
+# Keras VGG-19 topology: conv channel counts with 'P' = 2x2 max-pool.
+VGG19_CFG = [
+    64, 64, "P",
+    128, 128, "P",
+    256, 256, 256, 256, "P",
+    512, 512, 512, 512, "P",
+    512, 512, 512, 512, "P",
+]
+FC_WIDTH = 4096
+NUM_CLASSES = 1000
+
+
+def build_vgg19(
+    *, width: float = 0.25, hw: int = 64, num_classes: int | None = None
+) -> ModelSpec:
+    """Construct the width-scaled VGG-19 unit list."""
+    num_classes = num_classes or max(16, int(NUM_CLASSES * width))
+    layers: list[LayerSpec] = []
+    shape = (1, hw, hw, 3)
+    conv_i, pool_i = 0, 0
+    for item in VGG19_CFG:
+        if item == "P":
+            pool_i += 1
+            unit = maxpool_unit(f"pool{pool_i}", shape)
+        else:
+            conv_i += 1
+            cout = max(8, int(item * width))
+            unit = conv_unit(f"conv{conv_i}", shape, cout)
+        layers.append(unit)
+        shape = unit.output_shape
+
+    unit = flatten_unit("flatten", shape)
+    layers.append(unit)
+    shape = unit.output_shape
+
+    fc = max(64, int(FC_WIDTH * width))
+    for i, (out, act, sm) in enumerate(
+        [(fc, "relu", False), (fc, "relu", False), (num_classes, "none", True)], 1
+    ):
+        unit = dense_unit(f"fc{i}", shape, out, act=act, softmax=sm)
+        layers.append(unit)
+        shape = unit.output_shape
+
+    return ModelSpec(name="vgg19", input_shape=(1, hw, hw, 3), layers=layers)

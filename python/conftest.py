@@ -1,0 +1,7 @@
+"""Ensure `python/` is importable so `pytest python/tests/` works from the
+repository root as well as from `python/`."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

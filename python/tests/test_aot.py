@@ -1,0 +1,103 @@
+"""AOT path: HLO text well-formedness, manifest/weights consistency.
+
+These tests exercise the exact artifacts the Rust runtime consumes.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import export_model, lower_layer, to_hlo_text
+from compile.vgg import build_vgg19
+from compile.model import init_params
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return build_vgg19(width=0.0625, hw=32)
+
+
+@pytest.fixture(scope="module")
+def exported(tiny_model, tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    manifest = export_model(tiny_model, root, seed=0)
+    return tiny_model, root, manifest
+
+
+def test_hlo_text_is_parseable_module(tiny_model):
+    hlo = lower_layer(tiny_model.layers[0])
+    assert hlo.startswith("HloModule")
+    assert "ENTRY" in hlo
+
+
+def test_hlo_has_parameters(tiny_model):
+    # conv unit: x + weight + bias = 3 parameters
+    hlo = lower_layer(tiny_model.layers[0])
+    for i in range(3):
+        assert f"parameter({i})" in hlo
+    assert f"parameter(3)" not in hlo
+
+
+def test_export_writes_all_layers(exported):
+    model, root, manifest = exported
+    mdir = root / model.name
+    assert len(manifest["layers"]) == len(model.layers)
+    for entry in manifest["layers"]:
+        assert (mdir / entry["hlo"]).exists()
+
+
+def test_weights_bin_size_matches_manifest(exported):
+    model, root, manifest = exported
+    size = (root / model.name / "weights.bin").stat().st_size
+    assert size == manifest["weights_bytes"]
+    assert size == model.total_param_bytes
+
+
+def test_manifest_offsets_contiguous(exported):
+    _, _, manifest = exported
+    offset = 0
+    for entry in manifest["layers"]:
+        for p in entry["params"]:
+            assert p["offset_bytes"] == offset
+            assert p["size_bytes"] == int(np.prod(p["shape"])) * 4
+            offset += p["size_bytes"]
+    assert offset == manifest["weights_bytes"]
+
+
+def test_weights_roundtrip(exported):
+    """Slicing weights.bin at manifest offsets reproduces init_params —
+    exactly what the Rust weight store does."""
+    model, root, manifest = exported
+    blob = (root / model.name / "weights.bin").read_bytes()
+    params = init_params(model, seed=0)
+    for entry, lp in zip(manifest["layers"], params):
+        for pmeta, arr in zip(entry["params"], lp):
+            raw = blob[pmeta["offset_bytes"] : pmeta["offset_bytes"] + pmeta["size_bytes"]]
+            got = np.frombuffer(raw, "<f4").reshape(pmeta["shape"])
+            np.testing.assert_array_equal(got, arr)
+
+
+def test_manifest_shapes_chain(exported):
+    _, _, manifest = exported
+    layers = manifest["layers"]
+    for prev, nxt in zip(layers, layers[1:]):
+        assert prev["output_shape"] == nxt["input_shape"]
+
+
+def test_repo_artifacts_if_present():
+    """Validate the real artifacts/ dir when it has been built."""
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    idx = root / "manifest.json"
+    if not idx.exists():
+        pytest.skip("artifacts not built")
+    index = json.loads(idx.read_text())
+    for name, meta in index["models"].items():
+        manifest = json.loads((root / meta["manifest"]).read_text())
+        assert len(manifest["layers"]) == meta["layers"]
+        assert (root / name / "weights.bin").stat().st_size == manifest["weights_bytes"]
+        for entry in manifest["layers"]:
+            assert (root / name / entry["hlo"]).exists()

@@ -1,0 +1,238 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes (and the deterministic cases pin the exact shapes the models
+use) and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bias_act, conv2d, depthwise3x3, matmul, pointwise_conv
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(42)
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+)
+def test_matmul_hypothesis(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7919 + k * 31 + n))
+    x, y = rand(k1, (m, k)), rand(k2, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 512, 1024),  # VGG fc1 at 0.25x/64px
+        (4096, 27, 16),  # VGG conv1 im2col
+        (1024, 144, 16),  # conv after pool
+        (256, 128, 128),  # MXU-aligned
+        (128, 128, 128),
+        (1, 1, 1),
+        (129, 257, 127),  # off-tile
+    ],
+)
+def test_matmul_model_shapes(m, k, n):
+    k1, k2 = jax.random.split(KEY)
+    x, y = rand(k1, (m, k)), rand(k2, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_explicit_blocks():
+    k1, k2 = jax.random.split(KEY)
+    x, y = rand(k1, (100, 60)), rand(k2, (60, 80))
+    out = matmul(x, y, bm=32, bn=16, bk=8)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatch():
+    with pytest.raises(ValueError):
+        matmul(jnp.ones((2, 3)), jnp.ones((4, 5)))
+
+
+def test_matmul_zero_padding_exact():
+    # Padding K with zeros must not perturb the sum: identity check.
+    x = jnp.eye(130, dtype=jnp.float32)
+    y = rand(KEY, (130, 130))
+    np.testing.assert_array_equal(matmul(x, y), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    hw=st.integers(4, 32),
+    cin=st.integers(1, 32),
+    cout=st.integers(1, 32),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_hypothesis(hw, cin, cout, stride):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hw * 131 + cin * 17 + cout + stride))
+    x = rand(k1, (1, hw, hw, cin))
+    w = rand(k2, (3, 3, cin, cout))
+    np.testing.assert_allclose(
+        conv2d(x, w, stride=stride),
+        ref.conv2d_ref(x, w, stride=stride),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+@pytest.mark.parametrize(
+    "hw,cin,cout,stride",
+    [
+        (64, 3, 16, 1),  # VGG conv1
+        (64, 16, 16, 1),
+        (8, 128, 128, 1),  # VGG deep conv
+        (64, 3, 8, 2),  # MBv2 stem
+    ],
+)
+def test_conv2d_model_shapes(hw, cin, cout, stride):
+    k1, k2 = jax.random.split(KEY)
+    x = rand(k1, (1, hw, hw, cin))
+    w = rand(k2, (3, 3, cin, cout))
+    np.testing.assert_allclose(
+        conv2d(x, w, stride=stride),
+        ref.conv2d_ref(x, w, stride=stride),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+def test_conv2d_channel_mismatch():
+    with pytest.raises(ValueError):
+        conv2d(jnp.ones((1, 8, 8, 3)), jnp.ones((3, 3, 4, 8)))
+
+
+# ---------------------------------------------------------------------------
+# pointwise (1x1) conv
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(hw=st.integers(1, 32), cin=st.integers(1, 64), cout=st.integers(1, 64))
+def test_pointwise_hypothesis(hw, cin, cout):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hw + cin * 101 + cout * 13))
+    x = rand(k1, (1, hw, hw, cin))
+    w = rand(k2, (cin, cout))
+    np.testing.assert_allclose(
+        pointwise_conv(x, w),
+        ref.pointwise_conv_ref(x, w),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# depthwise 3x3
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    hw=st.integers(3, 32),
+    c=st.integers(1, 64),
+    stride=st.sampled_from([1, 2]),
+)
+def test_depthwise_hypothesis(hw, c, stride):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hw * 7 + c * 3 + stride))
+    x = rand(k1, (1, hw, hw, c))
+    w = rand(k2, (3, 3, c))
+    np.testing.assert_allclose(
+        depthwise3x3(x, w, stride=stride),
+        ref.depthwise3x3_ref(x, w, stride=stride),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("hw,c,stride", [(32, 8, 1), (32, 48, 2), (4, 480, 1), (8, 96, 2)])
+def test_depthwise_model_shapes(hw, c, stride):
+    k1, k2 = jax.random.split(KEY)
+    x = rand(k1, (1, hw, hw, c))
+    w = rand(k2, (3, 3, c))
+    np.testing.assert_allclose(
+        depthwise3x3(x, w, stride=stride),
+        ref.depthwise3x3_ref(x, w, stride=stride),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_depthwise_rejects_batch():
+    with pytest.raises(ValueError):
+        depthwise3x3(jnp.ones((2, 8, 8, 4)), jnp.ones((3, 3, 4)))
+
+
+def test_depthwise_rejects_bad_weight():
+    with pytest.raises(ValueError):
+        depthwise3x3(jnp.ones((1, 8, 8, 4)), jnp.ones((3, 3, 5)))
+
+
+# ---------------------------------------------------------------------------
+# fused bias + activation
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    c=st.integers(1, 200),
+    act=st.sampled_from(["relu", "relu6", "none"]),
+)
+def test_bias_act_hypothesis(rows, c, act):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(rows * 19 + c))
+    x = rand(k1, (rows, c)) * 4.0  # exercise the relu6 clip
+    b = rand(k2, (c,))
+    np.testing.assert_allclose(
+        bias_act(x, b, act=act), ref.bias_act_ref(x, b, act=act), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_bias_act_4d():
+    k1, k2 = jax.random.split(KEY)
+    x = rand(k1, (1, 16, 16, 24))
+    b = rand(k2, (24,))
+    np.testing.assert_allclose(
+        bias_act(x, b, act="relu6"),
+        ref.bias_act_ref(x, b, act="relu6"),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_bias_act_relu6_saturates():
+    x = jnp.full((4, 8), 100.0)
+    b = jnp.zeros((8,))
+    assert float(jnp.max(bias_act(x, b, act="relu6"))) == 6.0
+
+
+def test_bias_act_rejects_mismatch():
+    with pytest.raises(ValueError):
+        bias_act(jnp.ones((2, 3)), jnp.ones((4,)))

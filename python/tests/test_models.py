@@ -1,0 +1,125 @@
+"""L2 correctness: model structure, shape chaining, partition semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.mobilenetv2 import build_mobilenetv2
+from compile.model import forward, init_params, make_divisible
+from compile.vgg import build_vgg19
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    return build_vgg19(width=0.125, hw=32)
+
+
+@pytest.fixture(scope="module")
+def mbv2():
+    return build_mobilenetv2(width=0.25, hw=32)
+
+
+def test_vgg_unit_count(vgg):
+    # 16 convs + 5 pools + flatten + 3 dense = 25 partition points (Fig 2).
+    assert len(vgg.layers) == 25
+    kinds = [l.kind for l in vgg.layers]
+    assert kinds.count("conv") == 16
+    assert kinds.count("maxpool") == 5
+    assert kinds.count("flatten") == 1
+    assert kinds.count("dense") == 3
+
+
+def test_mbv2_unit_count(mbv2):
+    # stem + 17 inverted-residual blocks + head + gap + classifier = 21.
+    assert len(mbv2.layers) == 21
+    kinds = [l.kind for l in mbv2.layers]
+    assert kinds.count("invres") == 17
+
+
+def test_shapes_chain(vgg, mbv2):
+    for model in (vgg, mbv2):
+        for prev, nxt in zip(model.layers, model.layers[1:]):
+            assert prev.output_shape == nxt.input_shape, (
+                f"{model.name}: {prev.name} -> {nxt.name}"
+            )
+
+
+def test_flops_positive(vgg, mbv2):
+    for model in (vgg, mbv2):
+        for l in model.layers:
+            if l.kind != "flatten":
+                assert l.flops > 0, l.name
+
+
+def test_param_bytes_match_shapes(vgg):
+    for l in vgg.layers:
+        assert l.param_bytes == sum(
+            int(np.prod(p.shape)) * 4 for p in l.params
+        )
+
+
+def test_init_params_deterministic(vgg):
+    a = init_params(vgg, seed=7)
+    b = init_params(vgg, seed=7)
+    for la, lb in zip(a, b):
+        for pa, pb in zip(la, lb):
+            np.testing.assert_array_equal(pa, pb)
+
+
+def test_init_params_seed_changes(vgg):
+    a = init_params(vgg, seed=1)
+    b = init_params(vgg, seed=2)
+    # Conv weights differ (biases are zero in both).
+    assert not np.array_equal(a[0][0], b[0][0])
+
+
+def test_forward_shapes(vgg, mbv2):
+    for model in (vgg, mbv2):
+        params = init_params(model)
+        x = jnp.ones(model.input_shape, jnp.float32)
+        y = forward(model, params, x)
+        assert y.shape == model.layers[-1].output_shape
+        # Final unit ends in softmax: probabilities sum to 1.
+        np.testing.assert_allclose(float(y.sum()), 1.0, rtol=1e-5)
+
+
+def test_partition_equivalence(vgg):
+    """Executing layers 0..k then k..N equals the full forward — the
+    invariant that makes repartitioning semantically free."""
+    params = init_params(vgg)
+    x = jax.random.normal(jax.random.PRNGKey(0), vgg.input_shape, jnp.float32)
+    full = forward(vgg, params, x)
+    for k in [1, 7, len(vgg.layers) - 1]:
+        mid = x
+        for layer, lp in zip(vgg.layers[:k], params[:k]):
+            mid = layer.apply(mid, *lp)
+        out = mid
+        for layer, lp in zip(vgg.layers[k:], params[k:]):
+            out = layer.apply(out, *lp)
+        np.testing.assert_allclose(out, full, rtol=1e-4, atol=1e-6)
+
+
+def test_make_divisible():
+    assert make_divisible(8) == 8
+    assert make_divisible(32 * 0.25) == 8
+    assert make_divisible(24 * 0.25) == 8
+    assert make_divisible(1280 * 0.25) == 320
+    # never rounds below 90% of the requested value
+    for v in [10, 17, 100, 333]:
+        assert make_divisible(v) >= 0.9 * v
+
+
+def test_invres_residual_only_when_legal(mbv2):
+    for l in mbv2.layers:
+        if l.kind == "invres":
+            same_shape = l.input_shape == l.output_shape
+            if not same_shape:
+                continue
+            # residual blocks must preserve shape
+            assert l.input_shape[1:3] == l.output_shape[1:3]
+
+
+def test_output_bytes(vgg):
+    l = vgg.layers[0]
+    assert l.output_bytes == int(np.prod(l.output_shape)) * 4

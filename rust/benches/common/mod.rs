@@ -1,0 +1,37 @@
+#![allow(dead_code)] // shared across bench binaries; not all use every helper
+
+//! Shared helpers for the per-figure bench binaries.
+
+use neukonfig::stress::StressProfile;
+
+/// Grid resolution control: full paper grid (20 cells) by default;
+/// `NEUKONFIG_BENCH_QUICK=1` reduces to the 4 corners + centre.
+pub fn grid() -> Vec<StressProfile> {
+    if quick() {
+        vec![
+            StressProfile::new(0.25, 0.10),
+            StressProfile::new(0.25, 1.0),
+            StressProfile::new(1.0, 0.10),
+            StressProfile::new(1.0, 1.0),
+            StressProfile::new(0.5, 0.5),
+        ]
+    } else {
+        StressProfile::paper_grid()
+    }
+}
+
+pub fn quick() -> bool {
+    std::env::var("NEUKONFIG_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Render a downtime cell for a report row.
+pub fn cell_str(d: &Option<neukonfig::metrics::DowntimeRecord>) -> Vec<String> {
+    match d {
+        Some(d) => vec![
+            neukonfig::metrics::fmt_duration(d.total),
+            neukonfig::metrics::fmt_duration(d.real()),
+            neukonfig::metrics::fmt_duration(d.simulated),
+        ],
+        None => vec!["no result (OOM)".into(), "-".into(), "-".into()],
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig 11: Pause-and-Resume downtime across the CPU x memory availability
+//! grid, both speed-change directions. Paper: ~6 s, insensitive to CPU and
+//! memory availability; no results at <= 10 % memory.
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{measure_downtime, Approach, ExperimentSetup};
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env("mobilenetv2")?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let cfg = &setup.cfg;
+
+    let mut report = Report::new("Fig 11: Pause-and-Resume downtime grid");
+    let mut all_ok: Vec<f64> = Vec::new();
+    for (from, to, dir) in [
+        (cfg.network.high_mbps, cfg.network.low_mbps, "(a) to 5 Mbps"),
+        (cfg.network.low_mbps, cfg.network.high_mbps, "(b) to 20 Mbps"),
+    ] {
+        let mut t = Table::new(
+            &format!("{dir} (paper: ~6 s flat)"),
+            &["cpu %", "mem %", "downtime", "real", "simulated"],
+        );
+        for sp in common::grid() {
+            eprintln!("cell cpu={:.2} mem={:.2} {dir}", sp.cpu_avail, sp.mem_avail);
+            let d = measure_downtime(&env, &profile, Approach::PauseResume, sp, from, to)?;
+            if let Some(rec) = &d {
+                all_ok.push(rec.total.as_secs_f64());
+            } else {
+                assert!(
+                    sp.mem_avail <= 0.10 + 1e-9,
+                    "OOM only expected at <=10% memory, got cpu={} mem={}",
+                    sp.cpu_avail,
+                    sp.mem_avail
+                );
+            }
+            let mut row = vec![
+                format!("{:.0}", sp.cpu_avail * 100.0),
+                format!("{:.0}", sp.mem_avail * 100.0),
+            ];
+            row.extend(common::cell_str(&d));
+            t.row(row);
+        }
+        report.table(t);
+    }
+    let min = all_ok.iter().cloned().fold(f64::MAX, f64::min);
+    let max = all_ok.iter().cloned().fold(0.0f64, f64::max);
+    report.note(format!(
+        "downtime range across grid: {min:.2}-{max:.2} s (paper: ~6 s, flat). \
+         Flatness ratio max/min = {:.2} (CPU/memory availability does not drive downtime)",
+        max / min
+    ));
+    assert!(max > 1.0, "baseline downtime should be seconds");
+    assert!(max / min < 3.0, "grid should be roughly flat");
+    report.print();
+    Ok(())
+}

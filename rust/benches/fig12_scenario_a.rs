@@ -1,0 +1,56 @@
+//! Fig 12: Dynamic Switching Scenario A (hot standby) downtime grid.
+//! Paper: < 0.98 ms under all CPU/memory availabilities; Case 1 and Case 2
+//! identical (initialisation already done).
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{measure_downtime, Approach, ExperimentSetup};
+use neukonfig::coordinator::PlacementCase;
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env("mobilenetv2")?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let cfg = &setup.cfg;
+
+    let mut report = Report::new("Fig 12: Dynamic Switching Scenario A downtime grid");
+    let mut worst = 0.0f64;
+    for case in [PlacementCase::NewContainer, PlacementCase::SameContainer] {
+        for (from, to, dir) in [
+            (cfg.network.high_mbps, cfg.network.low_mbps, "to 5 Mbps"),
+            (cfg.network.low_mbps, cfg.network.high_mbps, "to 20 Mbps"),
+        ] {
+            let label = match case {
+                PlacementCase::NewContainer => "case 1 (own containers)",
+                PlacementCase::SameContainer => "case 2 (shared container)",
+            };
+            let mut t = Table::new(
+                &format!("{label}, {dir} (paper: < 0.98 ms)"),
+                &["cpu %", "mem %", "downtime", "real", "simulated"],
+            );
+            for sp in common::grid() {
+                eprintln!("A {label} cell cpu={:.2} mem={:.2} {dir}", sp.cpu_avail, sp.mem_avail);
+                let d = measure_downtime(&env, &profile, Approach::ScenarioA(case), sp, from, to)?;
+                if let Some(rec) = &d {
+                    worst = worst.max(rec.total.as_secs_f64());
+                }
+                let mut row = vec![
+                    format!("{:.0}", sp.cpu_avail * 100.0),
+                    format!("{:.0}", sp.mem_avail * 100.0),
+                ];
+                row.extend(common::cell_str(&d));
+                t.row(row);
+            }
+            report.table(t);
+        }
+    }
+    report.note(format!(
+        "worst-case switch downtime: {:.3} ms (paper: < 0.98 ms)",
+        worst * 1e3
+    ));
+    assert!(worst < 0.98e-3, "scenario A must switch in < 0.98 ms, got {worst}s");
+    report.print();
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Fig 13: Dynamic Switching Scenario B downtime grid.
+//! Paper: Case 1 (new container) ~1.9 s; Case 2 (same container) ~0.6 s.
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{measure_downtime, Approach, ExperimentSetup};
+use neukonfig::coordinator::PlacementCase;
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env("mobilenetv2")?;
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let cfg = &setup.cfg;
+
+    let mut report = Report::new("Fig 13: Dynamic Switching Scenario B downtime grid");
+    let mut means = Vec::new();
+    for (case, label, paper) in [
+        (PlacementCase::NewContainer, "case 1 (new containers)", "~1.9 s"),
+        (PlacementCase::SameContainer, "case 2 (same containers)", "~0.6 s"),
+    ] {
+        let mut case_samples = Vec::new();
+        for (from, to, dir) in [
+            (cfg.network.high_mbps, cfg.network.low_mbps, "to 5 Mbps"),
+            (cfg.network.low_mbps, cfg.network.high_mbps, "to 20 Mbps"),
+        ] {
+            let mut t = Table::new(
+                &format!("{label}, {dir} (paper: {paper})"),
+                &["cpu %", "mem %", "downtime", "real", "simulated"],
+            );
+            for sp in common::grid() {
+                eprintln!("B {label} cell cpu={:.2} mem={:.2} {dir}", sp.cpu_avail, sp.mem_avail);
+                let d = measure_downtime(&env, &profile, Approach::ScenarioB(case), sp, from, to)?;
+                if let Some(rec) = &d {
+                    case_samples.push(rec.total.as_secs_f64());
+                }
+                let mut row = vec![
+                    format!("{:.0}", sp.cpu_avail * 100.0),
+                    format!("{:.0}", sp.mem_avail * 100.0),
+                ];
+                row.extend(common::cell_str(&d));
+                t.row(row);
+            }
+            report.table(t);
+        }
+        let mean = case_samples.iter().sum::<f64>() / case_samples.len() as f64;
+        means.push(mean);
+    }
+    report.note(format!(
+        "mean downtime: case 1 = {:.2} s (paper ~1.9 s), case 2 = {:.2} s (paper ~0.6 s); \
+         case1/case2 ratio {:.1}x (paper ~3.2x — container start dominates case 1)",
+        means[0],
+        means[1],
+        means[0] / means[1]
+    ));
+    assert!(means[0] > means[1], "case 1 must cost more than case 2");
+    report.print();
+    Ok(())
+}

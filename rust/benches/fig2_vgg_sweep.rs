@@ -1,0 +1,51 @@
+//! Fig 2: VGG-19 end-to-end latency + transfer size per partition point at
+//! 20 and 5 Mbps. Paper result: the optimal split moves deeper (L17 -> L22)
+//! when the bandwidth drops.
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{partition_sweep, ExperimentSetup};
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env("vgg19")?;
+    eprintln!("profiling vgg19 ({} units, real execution)...", env.manifest.num_layers());
+    let profile = setup.measured_profile(&env, if common::quick() { 2 } else { 5 })?;
+
+    let mut report = Report::new("Fig 2: VGG-19 partition sweep");
+    let mut optima = Vec::new();
+    for bw in [setup.cfg.network.high_mbps, setup.cfg.network.low_mbps] {
+        let rows = partition_sweep(&profile, bw, setup.cfg.network.latency);
+        let opt = rows.iter().find(|r| r.optimal).unwrap().clone();
+        let mut t = Table::new(
+            &format!("@ {bw} Mbps — optimal split {} ({})", opt.split, opt.layer),
+            &["split", "after", "edge ms", "xfer ms", "cloud ms", "total ms", "out KB"],
+        );
+        for r in &rows {
+            t.row(vec![
+                format!("{}{}", r.split, if r.optimal { "*" } else { "" }),
+                r.layer.clone(),
+                format!("{:.1}", r.edge_s * 1e3),
+                format!("{:.1}", r.transfer_s * 1e3),
+                format!("{:.1}", r.cloud_s * 1e3),
+                format!("{:.1}", r.total_s * 1e3),
+                format!("{:.1}", r.out_kb),
+            ]);
+        }
+        report.table(t);
+        optima.push(opt.split);
+    }
+    report.note(format!(
+        "measured optimal split: {} @ 20 Mbps -> {} @ 5 Mbps (paper: 17 -> 22; \
+         same qualitative shift: lower bandwidth pushes the split deeper)",
+        optima[0], optima[1]
+    ));
+    assert!(
+        optima[1] >= optima[0],
+        "SHAPE CHECK FAILED: split should move deeper at lower bandwidth"
+    );
+    report.print();
+    Ok(())
+}

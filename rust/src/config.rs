@@ -1,0 +1,183 @@
+//! Experiment configuration.
+//!
+//! Defaults mirror the paper's testbed (§IV-A): 20 Mbps fibre-broadband
+//! uplink dropping to 5 Mbps, 20 ms RTT, a 4-core/8 GB edge and an
+//! 8-core/16 GB cloud, Docker 18.09 container costs, and the measured
+//! 763.1 MB per-pipeline memory footprint of Table I.
+//!
+//! The Docker control-plane costs have no real counterpart in this repo
+//! (we do the *model-load* work for real via PJRT compilation, but not
+//! `docker pause`/image start); they are injected as simulated clock
+//! offsets and are individually zeroable (`--no-sim-container-costs`) so
+//! every reported downtime can be decomposed into real + simulated parts.
+
+use std::time::Duration;
+
+/// Container-control-plane cost model (simulated offsets; paper §IV).
+#[derive(Debug, Clone)]
+pub struct ContainerCosts {
+    /// `docker pause` of a running container.
+    pub pause: Duration,
+    /// `docker unpause`.
+    pub unpause: Duration,
+    /// Cold start of the optimised 575 MB image (Scenario B Case 1).
+    pub container_start: Duration,
+    /// Stop/remove of a drained container.
+    pub container_stop: Duration,
+    /// TF/Keras application bring-up inside a container that our PJRT
+    /// compile path does not exhibit (graph/session construction). Applied
+    /// once per pipeline initialisation.
+    pub app_bringup: Duration,
+    /// Extra teardown+reload the naive Pause-and-Resume application does on
+    /// top of `app_bringup` (full TensorFlow model reload on BOTH sides
+    /// while the containers are frozen).
+    pub baseline_reload: Duration,
+}
+
+impl Default for ContainerCosts {
+    fn default() -> Self {
+        ContainerCosts {
+            pause: Duration::from_millis(300),
+            unpause: Duration::from_millis(300),
+            container_start: Duration::from_millis(600),
+            container_stop: Duration::from_millis(200),
+            app_bringup: Duration::from_millis(450),
+            baseline_reload: Duration::from_millis(1000),
+        }
+    }
+}
+
+impl ContainerCosts {
+    /// All-zero costs: report only the real measured work.
+    pub fn zero() -> Self {
+        ContainerCosts {
+            pause: Duration::ZERO,
+            unpause: Duration::ZERO,
+            container_start: Duration::ZERO,
+            container_stop: Duration::ZERO,
+            app_bringup: Duration::ZERO,
+            baseline_reload: Duration::ZERO,
+        }
+    }
+}
+
+/// Memory model (Table I).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Total edge-server memory (paper: 8 GB).
+    pub edge_total_mb: f64,
+    /// Total cloud-server memory (paper: 16 GB).
+    pub cloud_total_mb: f64,
+    /// Measured per-pipeline footprint (Table I "Initial Resources").
+    pub pipeline_mb: f64,
+    /// Optimised container image size (paper §IV-B), shared between
+    /// pipelines via the local cache.
+    pub image_mb: f64,
+    /// OS + daemon overhead reserved on every host. With this reservation,
+    /// a 763.1 MB pipeline no longer fits at 10 % memory availability on
+    /// the 8 GB edge — reproducing the paper's empty Fig-11 cells.
+    pub os_overhead_mb: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel {
+            edge_total_mb: 8192.0,
+            cloud_total_mb: 16384.0,
+            pipeline_mb: 763.1,
+            image_mb: 575.0,
+            os_overhead_mb: 256.0,
+        }
+    }
+}
+
+/// Network conditions (§IV-A).
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// "Typical broadband upload" speed.
+    pub high_mbps: f64,
+    /// "Poorer quality upload" speed.
+    pub low_mbps: f64,
+    /// One-way latency between edge and cloud.
+    pub latency: Duration,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            high_mbps: 20.0,
+            low_mbps: 5.0,
+            latency: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Compute model: relative speeds of the two domains.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Edge speed factor (1.0 = this host).
+    pub edge_scale: f64,
+    /// Cloud speed factor (paper: 8 cores vs 4 -> ~2x).
+    pub cloud_scale: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel { edge_scale: 1.0, cloud_scale: 2.0 }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub costs: ContainerCosts,
+    pub memory: MemoryModel,
+    pub network: NetworkModel,
+    pub compute: ComputeModel,
+    /// Edge frame-queue capacity (frames waiting for the edge stage).
+    pub queue_capacity: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn new() -> Self {
+        ExperimentConfig { queue_capacity: 8, seed: 0, ..Default::default() }
+    }
+
+    /// Zero out the simulated Docker costs.
+    pub fn without_sim_costs(mut self) -> Self {
+        self.costs = ContainerCosts::zero();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::new();
+        assert_eq!(c.network.high_mbps, 20.0);
+        assert_eq!(c.network.low_mbps, 5.0);
+        assert_eq!(c.network.latency, Duration::from_millis(20));
+        assert_eq!(c.memory.pipeline_mb, 763.1);
+        assert_eq!(c.memory.image_mb, 575.0);
+        assert_eq!(c.memory.edge_total_mb, 8192.0);
+    }
+
+    #[test]
+    fn zero_costs() {
+        let z = ContainerCosts::zero();
+        assert_eq!(z.pause, Duration::ZERO);
+        assert_eq!(z.baseline_reload, Duration::ZERO);
+    }
+
+    #[test]
+    fn without_sim_costs_keeps_rest() {
+        let c = ExperimentConfig::new().without_sim_costs();
+        assert_eq!(c.costs.container_start, Duration::ZERO);
+        assert_eq!(c.network.high_mbps, 20.0);
+        assert_eq!(c.queue_capacity, 8);
+    }
+}

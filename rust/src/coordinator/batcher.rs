@@ -1,0 +1,154 @@
+//! Frame micro-batcher: the bounded queue in front of the edge stage.
+//!
+//! The AOT executables are compiled for batch-1 video frames (the paper's
+//! workload), so "batching" here is admission + drain policy rather than
+//! tensor batching: frames queue up to a capacity, the serving loop drains
+//! up to `drain_max` per wake (amortising scheduling overhead), and
+//! arrivals beyond capacity are dropped — the edge behaviour behind
+//! Figs 14/15.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::device::Frame;
+
+/// Result of offering a frame to the batcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offer {
+    Accepted,
+    /// Queue full — frame dropped at the edge.
+    Rejected,
+}
+
+pub struct Batcher {
+    inner: Mutex<VecDeque<Frame>>,
+    notify: Condvar,
+    pub capacity: usize,
+    pub drain_max: usize,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, drain_max: usize) -> Self {
+        assert!(capacity > 0 && drain_max > 0);
+        Batcher {
+            inner: Mutex::new(VecDeque::with_capacity(capacity)),
+            notify: Condvar::new(),
+            capacity,
+            drain_max,
+        }
+    }
+
+    /// Non-blocking enqueue; full queue rejects (frame drop).
+    pub fn offer(&self, frame: Frame) -> Offer {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Offer::Rejected;
+        }
+        q.push_back(frame);
+        self.notify.notify_one();
+        Offer::Accepted
+    }
+
+    /// Drain up to `drain_max` queued frames (non-blocking).
+    pub fn drain(&self) -> Vec<Frame> {
+        let mut q = self.inner.lock().unwrap();
+        let n = q.len().min(self.drain_max);
+        q.drain(..n).collect()
+    }
+
+    /// Blocking drain: waits until at least one frame is available or the
+    /// timeout elapses. Returns an empty vec on timeout.
+    pub fn drain_wait(&self, timeout: std::time::Duration) -> Vec<Frame> {
+        let q = self.inner.lock().unwrap();
+        let (mut q, _t) = self
+            .notify
+            .wait_timeout_while(q, timeout, |q| q.is_empty())
+            .unwrap();
+        let n = q.len().min(self.drain_max);
+        q.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(id: u64) -> Frame {
+        Frame {
+            id,
+            captured_at: std::time::Duration::ZERO,
+            pixels: vec![0.0; 4],
+            shape: vec![1, 1, 1, 4],
+        }
+    }
+
+    #[test]
+    fn accepts_until_capacity() {
+        let b = Batcher::new(2, 4);
+        assert_eq!(b.offer(frame(0)), Offer::Accepted);
+        assert_eq!(b.offer(frame(1)), Offer::Accepted);
+        assert_eq!(b.offer(frame(2)), Offer::Rejected);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn drain_respects_max_and_order() {
+        let b = Batcher::new(8, 2);
+        for i in 0..5 {
+            b.offer(frame(i));
+        }
+        let d = b.drain();
+        assert_eq!(d.iter().map(|f| f.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn drain_empty_is_empty() {
+        let b = Batcher::new(2, 2);
+        assert!(b.drain().is_empty());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn freed_capacity_accepts_again() {
+        let b = Batcher::new(1, 1);
+        b.offer(frame(0));
+        assert_eq!(b.offer(frame(1)), Offer::Rejected);
+        b.drain();
+        assert_eq!(b.offer(frame(2)), Offer::Accepted);
+    }
+
+    #[test]
+    fn drain_wait_times_out() {
+        let b = Batcher::new(2, 2);
+        let got = b.drain_wait(std::time::Duration::from_millis(10));
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn drain_wait_wakes_on_offer() {
+        use std::sync::Arc;
+        let b = Arc::new(Batcher::new(2, 2));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.drain_wait(std::time::Duration::from_secs(5)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.offer(frame(7));
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_capacity() {
+        Batcher::new(0, 1);
+    }
+}

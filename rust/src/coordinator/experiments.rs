@@ -1,0 +1,458 @@
+//! Experiment drivers: one function per paper figure/table.
+//!
+//! Each driver runs the relevant approach on a simulated-clock environment
+//! with real PJRT work and returns structured rows; the bench binaries and
+//! `examples/reproduce_all.rs` render them as paper-vs-measured tables.
+//! See DESIGN.md §Experiment index for the mapping.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::clock::Clock;
+use crate::config::ExperimentConfig;
+use crate::metrics::DowntimeRecord;
+use crate::models::{default_artifacts_dir, ArtifactIndex, ModelManifest};
+use crate::profiler::{self, ModelProfile};
+use crate::stress::{self, StressProfile};
+
+use super::flow::{simulate_window, FlowOutcome};
+use super::pause_resume::PauseResume;
+use super::pipeline::EdgeCloudEnv;
+use super::switching::{PlacementCase, ScenarioA, ScenarioB};
+
+/// Shared setup for all experiment drivers.
+pub struct ExperimentSetup {
+    pub cfg: ExperimentConfig,
+    pub index: ArtifactIndex,
+}
+
+impl ExperimentSetup {
+    /// Load artifacts from the default location.
+    pub fn load() -> Result<Self> {
+        let index = ArtifactIndex::load(default_artifacts_dir())?;
+        Ok(ExperimentSetup { cfg: ExperimentConfig::new(), index })
+    }
+
+    pub fn with_cfg(mut self, cfg: ExperimentConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn manifest(&self, model: &str) -> Result<ModelManifest> {
+        self.index.model(model)
+    }
+
+    /// Simulated-clock environment for sweep experiments.
+    pub fn env(&self, model: &str) -> Result<Arc<EdgeCloudEnv>> {
+        let manifest = self.manifest(model)?;
+        Ok(Arc::new(EdgeCloudEnv::new(
+            self.cfg.clone(),
+            manifest,
+            Clock::simulated(),
+        )?))
+    }
+
+    /// Measure the per-layer profile on a fresh env (used by Fig 2/3 and
+    /// to derive the high/low split points for the downtime experiments).
+    pub fn measured_profile(&self, env: &EdgeCloudEnv, reps: usize) -> Result<ModelProfile> {
+        profiler::measure(
+            &env.manifest,
+            &env.weights,
+            env.edge.clone(),
+            env.cloud.clone(),
+            reps,
+        )
+    }
+}
+
+/// The two split points every repartition experiment toggles between.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitPair {
+    pub at_high: usize,
+    pub at_low: usize,
+}
+
+pub fn split_pair(profile: &ModelProfile, cfg: &ExperimentConfig) -> SplitPair {
+    SplitPair {
+        at_high: profile.optimal_split(cfg.network.high_mbps, cfg.network.latency, 1.0),
+        at_low: profile.optimal_split(cfg.network.low_mbps, cfg.network.latency, 1.0),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 / Fig 3: partition sweep
+// ---------------------------------------------------------------------------
+
+/// One stacked bar of Fig 2/3.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub split: usize,
+    pub layer: String,
+    pub edge_s: f64,
+    pub transfer_s: f64,
+    pub cloud_s: f64,
+    pub total_s: f64,
+    pub out_kb: f64,
+    pub optimal: bool,
+}
+
+/// All split points of `profile` at `bandwidth` (one panel of Fig 2/3).
+pub fn partition_sweep(
+    profile: &ModelProfile,
+    bandwidth_mbps: f64,
+    latency: Duration,
+) -> Vec<SweepRow> {
+    let opt = profile.optimal_split(bandwidth_mbps, latency, 1.0);
+    profile
+        .sweep(bandwidth_mbps, latency, 1.0)
+        .into_iter()
+        .map(|b| {
+            let bytes = if b.split == 0 {
+                profile.input_bytes
+            } else {
+                profile.layers[b.split - 1].output_bytes
+            };
+            SweepRow {
+                split: b.split,
+                layer: if b.split == 0 {
+                    "input".to_string()
+                } else {
+                    profile.layers[b.split - 1].name.clone()
+                },
+                edge_s: b.edge.as_secs_f64(),
+                transfer_s: b.transfer.as_secs_f64(),
+                cloud_s: b.cloud.as_secs_f64(),
+                total_s: b.total().as_secs_f64(),
+                out_kb: bytes as f64 / 1024.0,
+                optimal: b.split == opt,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11/12/13: downtime grids
+// ---------------------------------------------------------------------------
+
+/// The approach under test in a downtime grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Approach {
+    PauseResume,
+    ScenarioA(PlacementCase),
+    ScenarioB(PlacementCase),
+}
+
+impl Approach {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Approach::PauseResume => "pause-resume",
+            Approach::ScenarioA(PlacementCase::NewContainer) => "scenario-a-case1",
+            Approach::ScenarioA(PlacementCase::SameContainer) => "scenario-a-case2",
+            Approach::ScenarioB(PlacementCase::NewContainer) => "scenario-b-case1",
+            Approach::ScenarioB(PlacementCase::SameContainer) => "scenario-b-case2",
+        }
+    }
+}
+
+/// One cell of a Fig 11/12/13 surface.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    pub cpu_avail: f64,
+    pub mem_avail: f64,
+    /// None = the pipeline could not be admitted (the paper's missing
+    /// 10 %-memory results).
+    pub downtime: Option<DowntimeRecord>,
+}
+
+/// Run one repartition of `approach` on `env` under `stress_profile`,
+/// switching from the optimal split at `from_mbps` to the optimal at
+/// `to_mbps`. Returns None on admission failure (OOM).
+pub fn measure_downtime(
+    env: &Arc<EdgeCloudEnv>,
+    profile: &ModelProfile,
+    approach: Approach,
+    stress_profile: StressProfile,
+    from_mbps: f64,
+    to_mbps: f64,
+) -> Result<Option<DowntimeRecord>> {
+    // Apply stress: memory hog + CPU dilation on the edge.
+    let base_scale = env.cfg.compute.edge_scale;
+    let _applied = match stress::apply(&env.edge_host.ledger, stress_profile) {
+        Ok(a) => a,
+        Err(_) => return Ok(None), // stressor itself cannot even start
+    };
+    env.edge.set_cpu_scale(stress_profile.edge_scale(base_scale));
+    let _restore = ScopeGuard(|| env.edge.set_cpu_scale(base_scale));
+
+    env.link.set_bandwidth(from_mbps);
+    let lat = env.cfg.network.latency;
+    let from_split = profile.optimal_split(from_mbps, lat, 1.0);
+    let to_split = profile.optimal_split(to_mbps, lat, 1.0);
+
+    let run = || -> Result<DowntimeRecord> {
+        match approach {
+            Approach::PauseResume => {
+                let strat = PauseResume::deploy(env.clone(), from_split)?;
+                env.link.set_bandwidth(to_mbps);
+                strat.repartition(to_split)
+            }
+            Approach::ScenarioA(case) => {
+                let strat = ScenarioA::deploy(env.clone(), from_split, to_split, case)?;
+                env.link.set_bandwidth(to_mbps);
+                strat.switch()
+            }
+            Approach::ScenarioB(case) => {
+                let strat = ScenarioB::deploy(env.clone(), from_split)?.with_case(case);
+                env.link.set_bandwidth(to_mbps);
+                strat.repartition(to_split)
+            }
+        }
+    };
+    match run() {
+        Ok(rec) => Ok(Some(rec)),
+        Err(e) => {
+            // Admission failures (OOM) are expected at low memory; anything
+            // else is a real error.
+            if e.to_string().contains("OOM") || e.chain().any(|c| c.to_string().contains("OOM")) {
+                Ok(None)
+            } else {
+                Err(e).context("downtime measurement failed")
+            }
+        }
+    }
+}
+
+/// Full CPU x memory grid for one approach and direction (a Fig 11/12/13
+/// panel).
+pub fn downtime_grid(
+    env: &Arc<EdgeCloudEnv>,
+    profile: &ModelProfile,
+    approach: Approach,
+    from_mbps: f64,
+    to_mbps: f64,
+) -> Result<Vec<GridCell>> {
+    let mut cells = Vec::new();
+    for sp in StressProfile::paper_grid() {
+        let downtime = measure_downtime(env, profile, approach, sp, from_mbps, to_mbps)?;
+        cells.push(GridCell { cpu_avail: sp.cpu_avail, mem_avail: sp.mem_avail, downtime });
+    }
+    Ok(cells)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 14/15: frame drop during downtime
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct FrameDropRow {
+    pub approach: &'static str,
+    pub fps: f64,
+    pub downtime_s: f64,
+    pub outcome: FlowOutcome,
+}
+
+/// Frame-drop rates during the downtime of `approach` at `bandwidth`:
+/// the baseline serves nothing; Dynamic Switching keeps serving on the old
+/// pipeline whose degraded per-frame service time comes from Eq 1 at the
+/// *new* bandwidth with the *old* split.
+pub fn frame_drop_rows(
+    profile: &ModelProfile,
+    cfg: &ExperimentConfig,
+    approach: Approach,
+    downtime: Duration,
+    from_mbps: f64,
+    to_mbps: f64,
+    fps_list: &[f64],
+) -> Vec<FrameDropRow> {
+    let lat = cfg.network.latency;
+    let old_split = profile.optimal_split(from_mbps, lat, 1.0);
+    let service = match approach {
+        Approach::PauseResume => None,
+        _ => {
+            // The edge stage holds a frame for its edge compute + uplink
+            // serialisation at the degraded bandwidth.
+            let b = profile.breakdown(old_split, to_mbps, lat, 1.0);
+            Some(b.edge + b.transfer)
+        }
+    };
+    fps_list
+        .iter()
+        .map(|&fps| FrameDropRow {
+            approach: approach.label(),
+            fps,
+            downtime_s: downtime.as_secs_f64(),
+            outcome: simulate_window(downtime, fps, service, cfg.queue_capacity),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table I: memory accounting
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    pub approach: &'static str,
+    pub initial_mb: f64,
+    pub additional_mb: f64,
+    pub peak_mb: f64,
+    pub transient: bool,
+}
+
+/// Measure the edge-ledger footprint of each approach (Table I). Uses a
+/// fresh env per approach so ledgers start clean.
+pub fn table1_memory(setup: &ExperimentSetup, model: &str) -> Result<Vec<MemoryRow>> {
+    let mut rows = Vec::new();
+    let cfg = &setup.cfg;
+    let lat = cfg.network.latency;
+
+    for approach in [
+        Approach::PauseResume,
+        Approach::ScenarioA(PlacementCase::NewContainer),
+        Approach::ScenarioA(PlacementCase::SameContainer),
+        Approach::ScenarioB(PlacementCase::NewContainer),
+        Approach::ScenarioB(PlacementCase::SameContainer),
+    ] {
+        let env = setup.env(model)?;
+        let profile = crate::profiler::default_analytic(&env.manifest);
+        let from_split = profile.optimal_split(cfg.network.high_mbps, lat, 1.0);
+        let to_split = profile.optimal_split(cfg.network.low_mbps, lat, 1.0);
+
+        let pipelines_mb = |env: &EdgeCloudEnv| -> f64 {
+            env.edge_host
+                .ledger
+                .entries()
+                .iter()
+                .filter(|(l, _)| l.starts_with("container:"))
+                .map(|(_, m)| m)
+                .sum()
+        };
+
+        let (initial, peak_raw) = match approach {
+            Approach::PauseResume => {
+                let strat = PauseResume::deploy(env.clone(), from_split)?;
+                let initial = pipelines_mb(&env);
+                env.edge_host.ledger.reset_peak();
+                env.link.set_bandwidth(cfg.network.low_mbps);
+                strat.repartition(to_split)?;
+                (initial, env.edge_host.ledger.peak_mb())
+            }
+            Approach::ScenarioA(case) => {
+                let strat = ScenarioA::deploy(env.clone(), from_split, to_split, case)?;
+                let initial = pipelines_mb(&env);
+                env.edge_host.ledger.reset_peak();
+                env.link.set_bandwidth(cfg.network.low_mbps);
+                strat.switch()?;
+                (initial, env.edge_host.ledger.peak_mb())
+            }
+            Approach::ScenarioB(case) => {
+                let strat = ScenarioB::deploy(env.clone(), from_split)?.with_case(case);
+                let initial = pipelines_mb(&env);
+                env.edge_host.ledger.reset_peak();
+                env.link.set_bandwidth(cfg.network.low_mbps);
+                strat.repartition(to_split)?;
+                (initial, env.edge_host.ledger.peak_mb())
+            }
+        };
+        // Peak includes the OS overhead + stress entries; report the
+        // pipeline-attributable part.
+        let overhead = cfg.memory.os_overhead_mb;
+        let peak = (peak_raw - overhead).max(0.0);
+        let additional = (peak - initial).max(0.0);
+        let settled = pipelines_mb(&env);
+        rows.push(MemoryRow {
+            approach: approach.label(),
+            initial_mb: initial,
+            additional_mb: additional,
+            peak_mb: peak,
+            transient: additional > 0.0 && settled <= initial + 1e-9,
+        });
+    }
+    Ok(rows)
+}
+
+/// Tiny scope guard (no external crates).
+struct ScopeGuard<F: FnMut()>(F);
+
+impl<F: FnMut()> Drop for ScopeGuard<F> {
+    fn drop(&mut self) {
+        (self.0)();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::LayerProfile;
+
+    fn profile() -> ModelProfile {
+        let layers = (0..6)
+            .map(|i| LayerProfile {
+                index: i,
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                edge_time: Duration::from_millis(10),
+                cloud_time: Duration::from_millis(2),
+                output_bytes: 400_000 >> i,
+            })
+            .collect();
+        ModelProfile { model: "toy".into(), input_bytes: 800_000, layers }
+    }
+
+    #[test]
+    fn sweep_marks_exactly_one_optimum() {
+        let rows = partition_sweep(&profile(), 20.0, Duration::from_millis(20));
+        assert_eq!(rows.len(), 7);
+        assert_eq!(rows.iter().filter(|r| r.optimal).count(), 1);
+        let opt = rows.iter().find(|r| r.optimal).unwrap();
+        for r in &rows {
+            assert!(opt.total_s <= r.total_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_pair_moves_with_bandwidth() {
+        let cfg = ExperimentConfig::new();
+        let p = split_pair(&profile(), &cfg);
+        assert!(p.at_low >= p.at_high);
+    }
+
+    #[test]
+    fn frame_drop_baseline_worst() {
+        let cfg = ExperimentConfig::new();
+        let p = profile();
+        let dt = Duration::from_secs(6);
+        let base =
+            frame_drop_rows(&p, &cfg, Approach::PauseResume, dt, 20.0, 5.0, &[30.0]);
+        let dyn_b = frame_drop_rows(
+            &p,
+            &cfg,
+            Approach::ScenarioB(PlacementCase::SameContainer),
+            Duration::from_millis(600),
+            20.0,
+            5.0,
+            &[30.0],
+        );
+        assert!(base[0].outcome.dropped > dyn_b[0].outcome.dropped);
+    }
+
+    #[test]
+    fn approach_labels_unique() {
+        let labels: Vec<_> = [
+            Approach::PauseResume,
+            Approach::ScenarioA(PlacementCase::NewContainer),
+            Approach::ScenarioA(PlacementCase::SameContainer),
+            Approach::ScenarioB(PlacementCase::NewContainer),
+            Approach::ScenarioB(PlacementCase::SameContainer),
+        ]
+        .iter()
+        .map(|a| a.label())
+        .collect();
+        let mut dedup = labels.clone();
+        dedup.dedup();
+        assert_eq!(labels.len(), 5);
+        assert_eq!(dedup.len(), 5);
+    }
+}

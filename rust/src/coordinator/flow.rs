@@ -1,0 +1,175 @@
+//! Frame-flow simulation: what happens to device frames during a downtime
+//! window (Figs 14/15).
+//!
+//! A small discrete-event queueing simulation: frames arrive every `1/fps`,
+//! a single server (the still-running old pipeline, or nobody during a
+//! baseline pause) serves them with a fixed service time, and a bounded
+//! queue absorbs bursts. Frames arriving to a full queue (or while service
+//! is stopped and the queue is full) are dropped — the paper's frame drop
+//! rate during `t_downtime`.
+
+use std::time::Duration;
+
+/// Outcome of a frame-flow window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowOutcome {
+    pub arrivals: u64,
+    pub served: u64,
+    /// Frames still queued when the window closed (they survive — the new
+    /// pipeline will drain them).
+    pub queued: u64,
+    pub dropped: u64,
+}
+
+impl FlowOutcome {
+    pub fn drop_rate(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.arrivals as f64
+        }
+    }
+}
+
+/// Simulate a downtime window.
+///
+/// * `window` — the downtime duration.
+/// * `fps` — incoming frame rate.
+/// * `service` — per-frame service time of the degraded pipeline, or
+///   `None` when service is fully stopped (baseline Pause-and-Resume).
+/// * `queue_cap` — bounded frame queue in front of the edge stage.
+pub fn simulate_window(
+    window: Duration,
+    fps: f64,
+    service: Option<Duration>,
+    queue_cap: usize,
+) -> FlowOutcome {
+    assert!(fps > 0.0);
+    let interval = 1.0 / fps;
+    let window_s = window.as_secs_f64();
+
+    let mut out = FlowOutcome { arrivals: 0, served: 0, queued: 0, dropped: 0 };
+    // FIFO of arrival times waiting for the (single) server.
+    let mut queue: std::collections::VecDeque<f64> = std::collections::VecDeque::new();
+    let mut busy_until = 0.0f64; // server free at this instant
+
+    // A frame counts as served when its service *starts* inside the window
+    // (it was picked up by the degraded pipeline during the downtime).
+    let serve_before = |q: &mut std::collections::VecDeque<f64>,
+                            busy_until: &mut f64,
+                            horizon: f64,
+                            served: &mut u64| {
+        if let Some(s) = service {
+            let s = s.as_secs_f64();
+            while let Some(&arrived) = q.front() {
+                let start = busy_until.max(arrived);
+                if start < horizon {
+                    *busy_until = start + s;
+                    q.pop_front();
+                    *served += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    };
+
+    let mut k = 0u64;
+    loop {
+        let t = k as f64 * interval;
+        if t >= window_s {
+            break;
+        }
+        serve_before(&mut queue, &mut busy_until, t, &mut out.served);
+        out.arrivals += 1;
+        if queue.len() < queue_cap {
+            queue.push_back(t);
+        } else {
+            out.dropped += 1;
+        }
+        k += 1;
+    }
+    // Serve whatever can still start before the window closes.
+    serve_before(&mut queue, &mut busy_until, window_s, &mut out.served);
+
+    out.queued = queue.len() as u64;
+    debug_assert_eq!(out.arrivals, out.served + out.queued + out.dropped);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_drops_overflow_only_queue_absorbs() {
+        // Service stopped; queue of 8 absorbs the first 8, rest dropped.
+        let o = simulate_window(Duration::from_secs(2), 10.0, None, 8);
+        assert_eq!(o.arrivals, 20);
+        assert_eq!(o.served, 0);
+        assert_eq!(o.queued, 8);
+        assert_eq!(o.dropped, 12);
+    }
+
+    #[test]
+    fn fast_service_drops_nothing() {
+        let o = simulate_window(
+            Duration::from_secs(2),
+            10.0,
+            Some(Duration::from_millis(50)),
+            8,
+        );
+        assert_eq!(o.dropped, 0);
+        assert!(o.served > 0);
+    }
+
+    #[test]
+    fn slow_service_drops_some() {
+        // 30 fps in, ~3.3 fps service: most frames dropped once queue fills.
+        let o = simulate_window(
+            Duration::from_secs(3),
+            30.0,
+            Some(Duration::from_millis(300)),
+            4,
+        );
+        assert!(o.dropped > 0);
+        assert!(o.served >= 9); // ~3 s / 0.3 s
+        assert!(o.drop_rate() > 0.5);
+    }
+
+    #[test]
+    fn higher_fps_more_drops() {
+        // The trend in Figs 14/15.
+        let drop_at = |fps: f64| {
+            simulate_window(
+                Duration::from_secs(1),
+                fps,
+                Some(Duration::from_millis(200)),
+                4,
+            )
+            .dropped
+        };
+        assert!(drop_at(30.0) >= drop_at(15.0));
+        assert!(drop_at(15.0) >= drop_at(5.0));
+    }
+
+    #[test]
+    fn conservation_invariant() {
+        for (fps, svc_ms, cap) in [(7.0, 111, 3), (24.0, 45, 10), (60.0, 500, 1)] {
+            let o = simulate_window(
+                Duration::from_secs(5),
+                fps,
+                Some(Duration::from_millis(svc_ms)),
+                cap,
+            );
+            assert_eq!(o.arrivals, o.served + o.queued + o.dropped);
+        }
+    }
+
+    #[test]
+    fn zero_window_no_arrivals_edge() {
+        let o = simulate_window(Duration::ZERO, 30.0, None, 4);
+        assert_eq!(o.arrivals, 0);
+        assert_eq!(o.drop_rate(), 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 coordinator — the NEUKONFIG framework itself.
+//!
+//! * [`pipeline`] — the edge-cloud pipeline and its factory ([`pipeline::EdgeCloudEnv`]).
+//! * [`router`] — frame routing + the atomic switch.
+//! * [`monitor`] — network-speed watching and repartition triggers.
+//! * [`planner`] — Equation-1 split planning from the layer profile.
+//! * [`pause_resume`] — the baseline approach (§III-A).
+//! * [`switching`] — Dynamic Switching, Scenario A/B x Case 1/2 (§III-B).
+//! * [`batcher`] — the bounded edge frame queue.
+//! * [`flow`] — frame-drop simulation during downtime windows (Figs 14/15).
+//! * [`state`] — the pipeline lifecycle state machine.
+//! * [`experiments`] — drivers that regenerate every paper figure/table.
+
+pub mod batcher;
+pub mod experiments;
+pub mod flow;
+pub mod monitor;
+pub mod pause_resume;
+pub mod pipeline;
+pub mod planner;
+pub mod router;
+pub mod server;
+pub mod state;
+pub mod switching;
+
+pub use monitor::{BandwidthChange, NetworkMonitor, TriggerPolicy};
+pub use pause_resume::PauseResume;
+pub use pipeline::{EdgeCloudEnv, InferenceReport, Pipeline, Placement};
+pub use planner::{PartitionPlan, Planner};
+pub use router::{RouteOutcome, Router};
+pub use server::{serve, ServeReport, ServerConfig, Strategy};
+pub use state::PipelineState;
+pub use switching::{PlacementCase, ScenarioA, ScenarioB};

@@ -1,0 +1,230 @@
+//! Network-speed monitor: watches the shaped link, applies the bandwidth
+//! trace, and raises repartition events when the speed changes.
+//!
+//! This is NEUKONFIG's "identify new metadata" trigger (§III): variation
+//! in network speed is the validated repartitioning scenario (§II-B; CPU
+//! and memory stress were shown *not* to move the split).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::netsim::{Link, Schedule};
+
+/// A detected change in network speed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthChange {
+    pub at: Duration,
+    pub from_mbps: f64,
+    pub to_mbps: f64,
+}
+
+pub struct NetworkMonitor {
+    link: Arc<Link>,
+    schedule: Mutex<Schedule>,
+    last_mbps: Mutex<f64>,
+    /// Relative change that counts as a repartition trigger (e.g. 0.2 =
+    /// 20 %); tiny jitter is ignored.
+    pub threshold: f64,
+}
+
+impl NetworkMonitor {
+    pub fn new(link: Arc<Link>, schedule: Schedule) -> Self {
+        let last = link.bandwidth_mbps();
+        NetworkMonitor {
+            link,
+            schedule: Mutex::new(schedule),
+            last_mbps: Mutex::new(last),
+            threshold: 0.2,
+        }
+    }
+
+    /// Advance the trace to `now` (applying due bandwidth events to the
+    /// link) and report a change if it crosses the threshold.
+    pub fn poll(&self, now: Duration) -> Option<BandwidthChange> {
+        if let Some(new_bw) = self.schedule.lock().unwrap().poll(now) {
+            self.link.set_bandwidth(new_bw);
+        }
+        let current = self.link.bandwidth_mbps();
+        let mut last = self.last_mbps.lock().unwrap();
+        let rel = (current - *last).abs() / last.max(1e-9);
+        if rel > self.threshold {
+            let change = BandwidthChange { at: now, from_mbps: *last, to_mbps: current };
+            *last = current;
+            Some(change)
+        } else {
+            None
+        }
+    }
+
+    pub fn next_event(&self) -> Option<(Duration, f64)> {
+        self.schedule.lock().unwrap().peek_next()
+    }
+
+    pub fn trace_done(&self) -> bool {
+        self.schedule.lock().unwrap().is_done()
+    }
+}
+
+/// Repartition-frequency policy (the paper's §VI future work: "how
+/// frequently must the DNN be repartitioned").
+///
+/// Two guards against thrashing on a jittery link:
+/// * **debounce** — a change must persist for `confirm_polls` consecutive
+///   polls before it triggers (transient dips are ignored);
+/// * **cooldown** — at most one repartition per `min_interval`.
+#[derive(Debug)]
+pub struct TriggerPolicy {
+    pub min_interval: Duration,
+    pub confirm_polls: u32,
+    state: Mutex<PolicyState>,
+}
+
+#[derive(Debug, Default)]
+struct PolicyState {
+    pending: Option<BandwidthChange>,
+    confirmations: u32,
+    last_fire: Option<Duration>,
+}
+
+impl TriggerPolicy {
+    pub fn new(min_interval: Duration, confirm_polls: u32) -> Self {
+        TriggerPolicy {
+            min_interval,
+            confirm_polls,
+            state: Mutex::new(PolicyState::default()),
+        }
+    }
+
+    /// Immediate triggering (the paper's evaluated behaviour).
+    pub fn immediate() -> Self {
+        Self::new(Duration::ZERO, 0)
+    }
+
+    /// Feed one monitor poll result; returns the change once it survives
+    /// the debounce + cooldown gates.
+    pub fn filter(
+        &self,
+        now: Duration,
+        observed: Option<BandwidthChange>,
+    ) -> Option<BandwidthChange> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(change) = observed {
+            // A new (different-target) change restarts confirmation.
+            match s.pending {
+                Some(p) if p.to_mbps == change.to_mbps => {}
+                _ => s.confirmations = 0,
+            }
+            s.pending = Some(change);
+        }
+        let pending = s.pending?;
+        s.confirmations += 1;
+        if s.confirmations <= self.confirm_polls {
+            return None;
+        }
+        if let Some(last) = s.last_fire {
+            if now < last + self.min_interval {
+                return None; // still cooling down; keep pending
+            }
+        }
+        s.pending = None;
+        s.confirmations = 0;
+        s.last_fire = Some(now);
+        Some(pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::Clock;
+
+    fn setup(events: Vec<(Duration, f64)>) -> (Arc<Link>, NetworkMonitor) {
+        let link = Arc::new(Link::new(Clock::simulated(), 20.0, Duration::from_millis(20)));
+        let mon = NetworkMonitor::new(link.clone(), Schedule::new(events));
+        (link, mon)
+    }
+
+    #[test]
+    fn detects_scheduled_drop() {
+        let (link, mon) = setup(vec![(Duration::from_secs(5), 5.0)]);
+        assert_eq!(mon.poll(Duration::from_secs(1)), None);
+        let c = mon.poll(Duration::from_secs(5)).expect("change");
+        assert_eq!(c.from_mbps, 20.0);
+        assert_eq!(c.to_mbps, 5.0);
+        assert_eq!(link.bandwidth_mbps(), 5.0);
+    }
+
+    #[test]
+    fn no_duplicate_events() {
+        let (_, mon) = setup(vec![(Duration::from_secs(1), 5.0)]);
+        assert!(mon.poll(Duration::from_secs(2)).is_some());
+        assert!(mon.poll(Duration::from_secs(3)).is_none());
+    }
+
+    #[test]
+    fn ignores_sub_threshold_jitter() {
+        let (_, mon) = setup(vec![(Duration::from_secs(1), 21.0)]);
+        // 5% change < 20% threshold.
+        assert!(mon.poll(Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn detects_external_change() {
+        // Bandwidth changed directly on the link (not via the trace).
+        let (link, mon) = setup(vec![]);
+        link.set_bandwidth(5.0);
+        let c = mon.poll(Duration::from_secs(1)).expect("change");
+        assert_eq!(c.to_mbps, 5.0);
+        assert!(mon.trace_done());
+    }
+
+    fn change(to: f64) -> BandwidthChange {
+        BandwidthChange { at: Duration::ZERO, from_mbps: 20.0, to_mbps: to }
+    }
+
+    #[test]
+    fn policy_immediate_passes_through() {
+        let p = TriggerPolicy::immediate();
+        assert_eq!(p.filter(Duration::ZERO, Some(change(5.0))), Some(change(5.0)));
+    }
+
+    #[test]
+    fn policy_debounce_requires_confirmations() {
+        let p = TriggerPolicy::new(Duration::ZERO, 2);
+        let t = Duration::from_secs;
+        assert_eq!(p.filter(t(0), Some(change(5.0))), None);
+        assert_eq!(p.filter(t(1), None), None); // 2nd confirmation
+        assert_eq!(p.filter(t(2), None), Some(change(5.0))); // survives
+    }
+
+    #[test]
+    fn policy_transient_dip_resets() {
+        let p = TriggerPolicy::new(Duration::ZERO, 2);
+        let t = Duration::from_secs;
+        assert_eq!(p.filter(t(0), Some(change(5.0))), None);
+        // Link recovers: a different change target restarts confirmation.
+        assert_eq!(p.filter(t(1), Some(change(20.0))), None);
+        assert_eq!(p.filter(t(2), None), None);
+        assert_eq!(p.filter(t(3), None), Some(change(20.0)));
+    }
+
+    #[test]
+    fn policy_cooldown_rate_limits() {
+        let p = TriggerPolicy::new(Duration::from_secs(10), 0);
+        let t = Duration::from_secs;
+        assert_eq!(p.filter(t(0), Some(change(5.0))), Some(change(5.0)));
+        // Second change arrives inside the cooldown: held, not dropped.
+        assert_eq!(p.filter(t(3), Some(change(20.0))), None);
+        assert_eq!(p.filter(t(11), None), Some(change(20.0)));
+    }
+
+    #[test]
+    fn rise_and_drop_both_detected() {
+        let (_, mon) = setup(vec![
+            (Duration::from_secs(1), 5.0),
+            (Duration::from_secs(2), 20.0),
+        ]);
+        assert_eq!(mon.poll(Duration::from_secs(1)).unwrap().to_mbps, 5.0);
+        assert_eq!(mon.poll(Duration::from_secs(2)).unwrap().to_mbps, 20.0);
+    }
+}

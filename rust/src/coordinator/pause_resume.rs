@@ -1,0 +1,84 @@
+//! Baseline: Pause-and-Resume repartitioning (§III-A, Equation 2).
+//!
+//! When the network speed changes: (i) identify new metadata, (ii) pause
+//! the edge-cloud pipeline (docker pause on both containers — no frames
+//! are processed at all), (iii) update the metadata — the naive
+//! application tears down and reloads the model on both sides (simulated
+//! TF/Keras reload + the *real* PJRT recompilation of both partition
+//! chains), (iv) unpause and resume. The entire window is edge service
+//! downtime: `t_downtime = t_update`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::metrics::DowntimeRecord;
+
+use super::pipeline::{EdgeCloudEnv, Placement};
+use super::router::Router;
+
+pub struct PauseResume {
+    pub env: Arc<EdgeCloudEnv>,
+    pub router: Arc<Router>,
+}
+
+impl PauseResume {
+    /// Deploy the initial pipeline (fresh containers on both hosts). The
+    /// naive application never caches compiled executables.
+    pub fn deploy(env: Arc<EdgeCloudEnv>, initial_split: usize) -> Result<Self> {
+        let p = env.build_pipeline_opts(initial_split, Placement::NewContainers, false)?;
+        let router = Arc::new(Router::new(env.clock.clone(), Arc::new(p))?);
+        Ok(PauseResume { env, router })
+    }
+
+    pub fn current_split(&self) -> usize {
+        self.router.active().split
+    }
+
+    /// Repartition to `new_split` with Pause and Resume; returns the
+    /// measured downtime record (Equation 2).
+    pub fn repartition(&self, new_split: usize) -> Result<DowntimeRecord> {
+        let clock = &self.env.clock;
+        let sim0 = clock.simulated_component();
+        let t0 = clock.now();
+        let mut rec = DowntimeRecord::default();
+
+        self.router.set_downtime(true);
+
+        // (ii) Pause processing on the edge-cloud pipeline.
+        let old = self.router.active();
+        self.router.pause()?;
+        self.env.edge_host.pause(&old.edge_container);
+        self.env.cloud_host.pause(&old.cloud_container);
+        let t_pause = clock.now() - t0;
+        rec.push_phase("pause", t_pause);
+
+        // (iii) Update metadata: the naive app reloads the DNN on both
+        // sides inside the frozen containers.
+        let t1 = clock.now();
+        clock.sleep(self.env.cfg.costs.baseline_reload);
+        // use_cache = false: the naive application reloads the full model
+        // (the paper's Keras reload), not just the split delta.
+        let new_pipe = self.env.build_pipeline_opts(
+            new_split,
+            Placement::Existing {
+                edge: old.edge_container.clone(),
+                cloud: old.cloud_container.clone(),
+            },
+            false,
+        )?;
+        rec.push_phase("update", clock.now() - t1);
+
+        // (iv) Resume execution with the new partitions.
+        let t2 = clock.now();
+        self.env.edge_host.unpause(&old.edge_container);
+        self.env.cloud_host.unpause(&old.cloud_container);
+        self.router.resume(Some(Arc::new(new_pipe)))?;
+        rec.push_phase("resume", clock.now() - t2);
+
+        self.router.set_downtime(false);
+        rec.total = clock.now() - t0;
+        rec.simulated = clock.simulated_component() - sim0;
+        Ok(rec)
+    }
+}

@@ -1,0 +1,118 @@
+//! Repartition planner: turns a bandwidth change into new partition
+//! metadata (the split point), using the Equation-1 profile.
+//!
+//! §III-A step (i): "identify the new metadata ... using an estimation-
+//! based approach to predict the latency of individual layers" — our
+//! profile is measured per layer once (or analytic from FLOPs) and the
+//! planner evaluates Eq. 1 across all split points in microseconds.
+
+use std::time::Duration;
+
+use crate::profiler::{LatencyBreakdown, ModelProfile};
+
+/// New partition metadata for a pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionPlan {
+    pub split: usize,
+    pub predicted: LatencyBreakdown,
+}
+
+pub struct Planner {
+    profile: ModelProfile,
+    latency: Duration,
+    edge_cpu_avail: f64,
+}
+
+impl Planner {
+    pub fn new(profile: ModelProfile, latency: Duration) -> Self {
+        Planner { profile, latency, edge_cpu_avail: 1.0 }
+    }
+
+    pub fn with_cpu_avail(mut self, avail: f64) -> Self {
+        self.edge_cpu_avail = avail;
+        self
+    }
+
+    /// Optimal split for the given bandwidth.
+    pub fn plan(&self, bandwidth_mbps: f64) -> PartitionPlan {
+        let split = self
+            .profile
+            .optimal_split(bandwidth_mbps, self.latency, self.edge_cpu_avail);
+        PartitionPlan {
+            split,
+            predicted: self
+                .profile
+                .breakdown(split, bandwidth_mbps, self.latency, self.edge_cpu_avail),
+        }
+    }
+
+    /// Whether a bandwidth change actually moves the split (if not, no
+    /// repartition is needed — the future-work point of §VI).
+    pub fn should_repartition(&self, current_split: usize, new_bw: f64) -> Option<PartitionPlan> {
+        let plan = self.plan(new_bw);
+        (plan.split != current_split).then_some(plan)
+    }
+
+    pub fn profile(&self) -> &ModelProfile {
+        &self.profile
+    }
+
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::LayerProfile;
+
+    fn profile() -> ModelProfile {
+        // Compute-heavy early layers with shrinking outputs.
+        let layers = (0..8)
+            .map(|i| LayerProfile {
+                index: i,
+                name: format!("l{i}"),
+                kind: "conv".into(),
+                edge_time: Duration::from_millis(20),
+                cloud_time: Duration::from_millis(4),
+                output_bytes: 800_000 >> i,
+            })
+            .collect();
+        ModelProfile { model: "toy".into(), input_bytes: 1_600_000, layers }
+    }
+
+    #[test]
+    fn plan_matches_profile_optimum() {
+        let p = Planner::new(profile(), Duration::from_millis(20));
+        let plan = p.plan(20.0);
+        assert_eq!(
+            plan.split,
+            p.profile().optimal_split(20.0, Duration::from_millis(20), 1.0)
+        );
+        assert_eq!(plan.predicted.split, plan.split);
+    }
+
+    #[test]
+    fn no_repartition_when_split_unchanged() {
+        let p = Planner::new(profile(), Duration::from_millis(20));
+        let plan = p.plan(20.0);
+        assert!(p.should_repartition(plan.split, 20.0).is_none());
+    }
+
+    #[test]
+    fn bandwidth_drop_changes_plan() {
+        let p = Planner::new(profile(), Duration::from_millis(20));
+        let high = p.plan(100.0);
+        let low = p.plan(0.5);
+        assert!(low.split >= high.split, "{} >= {}", low.split, high.split);
+        assert!(p.should_repartition(high.split, 0.5).is_some());
+    }
+
+    #[test]
+    fn cpu_avail_shifts_split_towards_cloud() {
+        let unstressed = Planner::new(profile(), Duration::from_millis(20));
+        let stressed = Planner::new(profile(), Duration::from_millis(20)).with_cpu_avail(0.05);
+        assert!(stressed.plan(20.0).split <= unstressed.plan(20.0).split);
+    }
+}

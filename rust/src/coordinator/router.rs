@@ -1,0 +1,131 @@
+//! Request router: directs device frames to the active pipeline and
+//! implements the atomic switch at the heart of Dynamic Switching.
+//!
+//! The switch is an `Arc` pointer swap under an `RwLock` — the measured
+//! `t_switch` of Equation 3. During a baseline pause the router drops
+//! every frame (the paper: "no frames sent from the device to the edge
+//! will be processed"); during a Dynamic Switching window frames keep
+//! flowing to the old pipeline at degraded quality.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::clock::Clock;
+use crate::metrics::{FrameStats, LatencyHistogram};
+
+use super::pipeline::{InferenceReport, Pipeline};
+use super::state::PipelineState;
+
+/// Outcome of routing one frame.
+pub enum RouteOutcome {
+    Processed(InferenceReport),
+    /// Dropped because the router is paused (baseline downtime).
+    DroppedPaused,
+}
+
+pub struct Router {
+    active: RwLock<Arc<Pipeline>>,
+    paused: AtomicBool,
+    /// Set while a repartition window is open (frame-drop attribution).
+    in_downtime: AtomicBool,
+    pub clock: Clock,
+    pub stats: FrameStats,
+    pub latency: LatencyHistogram,
+}
+
+impl Router {
+    /// Create a router over an initial pipeline, activating it.
+    pub fn new(clock: Clock, initial: Arc<Pipeline>) -> Result<Self> {
+        initial.transition(PipelineState::Active)?;
+        Ok(Router {
+            active: RwLock::new(initial),
+            paused: AtomicBool::new(false),
+            in_downtime: AtomicBool::new(false),
+            clock,
+            stats: FrameStats::new(),
+            latency: LatencyHistogram::new(true),
+        })
+    }
+
+    pub fn active(&self) -> Arc<Pipeline> {
+        self.active.read().unwrap().clone()
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused.load(Ordering::Acquire)
+    }
+
+    pub fn set_downtime(&self, v: bool) {
+        self.in_downtime.store(v, Ordering::Release);
+    }
+
+    pub fn in_downtime(&self) -> bool {
+        self.in_downtime.load(Ordering::Acquire)
+    }
+
+    /// Route one frame to the active pipeline.
+    pub fn route(&self, frame: &Literal) -> Result<RouteOutcome> {
+        self.stats.produced();
+        if self.is_paused() {
+            self.stats.dropped(self.in_downtime());
+            return Ok(RouteOutcome::DroppedPaused);
+        }
+        let pipeline = self.active();
+        let report = pipeline.infer(frame)?;
+        self.latency.record(report.total());
+        self.stats.processed();
+        Ok(RouteOutcome::Processed(report))
+    }
+
+    /// Atomically redirect traffic to `new` (Dynamic Switching's
+    /// `t_switch`). The old pipeline is moved to Draining and returned so
+    /// the strategy can retire or recycle it. Returns the measured switch
+    /// time on the experiment clock.
+    pub fn switch(&self, new: Arc<Pipeline>) -> Result<(Arc<Pipeline>, Duration)> {
+        let t0 = self.clock.now();
+        match new.state() {
+            PipelineState::Initialising | PipelineState::Standby => {
+                new.transition(PipelineState::Active)?
+            }
+            PipelineState::Active => {}
+            s => anyhow::bail!("cannot switch to a pipeline in state {s}"),
+        }
+        let old = {
+            let mut guard = self.active.write().unwrap();
+            std::mem::replace(&mut *guard, new)
+        };
+        old.transition(PipelineState::Draining)?;
+        Ok((old, self.clock.now() - t0))
+    }
+
+    /// Baseline pause: stop processing entirely.
+    pub fn pause(&self) -> Result<()> {
+        self.active().transition(PipelineState::Paused)?;
+        self.paused.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Baseline resume, optionally with a rebuilt pipeline (the updated
+    /// metadata of §III-A step iv).
+    pub fn resume(&self, replacement: Option<Arc<Pipeline>>) -> Result<()> {
+        match replacement {
+            Some(p) => {
+                p.transition(PipelineState::Active)?;
+                let old = {
+                    let mut guard = self.active.write().unwrap();
+                    std::mem::replace(&mut *guard, p)
+                };
+                old.transition(PipelineState::Terminated)?;
+            }
+            None => {
+                self.active().transition(PipelineState::Active)?;
+            }
+        }
+        self.paused.store(false, Ordering::Release);
+        Ok(())
+    }
+}

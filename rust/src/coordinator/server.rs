@@ -1,0 +1,241 @@
+//! The serving daemon: threads wiring device -> batcher -> router ->
+//! pipeline, with the monitor/planner control loop driving repartitions.
+//!
+//! This is the deployable form of the system (the e2e example and the
+//! `serve` CLI subcommand are thin wrappers around it): a camera thread
+//! paces frames into the bounded [`Batcher`]; a worker drains and routes
+//! them; a control thread polls the [`NetworkMonitor`] through the
+//! [`TriggerPolicy`] and executes the configured repartition strategy.
+//! Everything shuts down cleanly on `stop()` or when the trace ends.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::device::FrameSource;
+use crate::metrics::DowntimeRecord;
+
+use super::batcher::{Batcher, Offer};
+use super::monitor::{NetworkMonitor, TriggerPolicy};
+use super::pause_resume::PauseResume;
+use super::pipeline::EdgeCloudEnv;
+use super::planner::Planner;
+use super::router::Router;
+use super::switching::{PlacementCase, ScenarioA, ScenarioB};
+
+/// Which repartitioning strategy the server runs.
+pub enum Strategy {
+    PauseResume(PauseResume),
+    ScenarioA(ScenarioA),
+    ScenarioB(ScenarioB),
+}
+
+impl Strategy {
+    pub fn router(&self) -> Arc<Router> {
+        match self {
+            Strategy::PauseResume(s) => s.router.clone(),
+            Strategy::ScenarioA(s) => s.router.clone(),
+            Strategy::ScenarioB(s) => s.router.clone(),
+        }
+    }
+
+    /// Execute one repartition to `split`, returning the downtime record.
+    pub fn repartition(&self, split: usize) -> Result<DowntimeRecord> {
+        match self {
+            Strategy::PauseResume(s) => s.repartition(split),
+            Strategy::ScenarioA(s) => {
+                let rec = s.switch()?;
+                // Background: make sure the displaced standby matches the
+                // next plan if the toggle is not symmetric.
+                let _ = s.ensure_standby(split_of(&s.router));
+                Ok(rec)
+            }
+            Strategy::ScenarioB(s) => s.repartition(split),
+        }
+    }
+
+    /// Deploy by name ("pause-resume", "scenario-a-case1", ...).
+    pub fn deploy(
+        name: &str,
+        env: Arc<EdgeCloudEnv>,
+        initial_split: usize,
+        standby_split: usize,
+    ) -> Result<Strategy> {
+        Ok(match name {
+            "pause-resume" => Strategy::PauseResume(PauseResume::deploy(env, initial_split)?),
+            "scenario-a-case1" => Strategy::ScenarioA(ScenarioA::deploy(
+                env,
+                initial_split,
+                standby_split,
+                PlacementCase::NewContainer,
+            )?),
+            "scenario-a-case2" => Strategy::ScenarioA(ScenarioA::deploy(
+                env,
+                initial_split,
+                standby_split,
+                PlacementCase::SameContainer,
+            )?),
+            "scenario-b-case1" => Strategy::ScenarioB(
+                ScenarioB::deploy(env, initial_split)?.with_case(PlacementCase::NewContainer),
+            ),
+            "scenario-b-case2" => Strategy::ScenarioB(
+                ScenarioB::deploy(env, initial_split)?.with_case(PlacementCase::SameContainer),
+            ),
+            other => anyhow::bail!("unknown strategy {other:?}"),
+        })
+    }
+}
+
+fn split_of(router: &Arc<Router>) -> usize {
+    router.active().split
+}
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub fps: f64,
+    pub run_for: Duration,
+    pub queue_capacity: usize,
+    pub drain_max: usize,
+    pub policy: TriggerPolicy,
+    /// Monitor poll interval.
+    pub poll_every: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            fps: 15.0,
+            run_for: Duration::from_secs(15),
+            queue_capacity: 8,
+            drain_max: 4,
+            policy: TriggerPolicy::immediate(),
+            poll_every: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Outcome of a serve run.
+#[derive(Debug, Default)]
+pub struct ServeReport {
+    pub downtimes: Vec<DowntimeRecord>,
+    pub repartitions: Vec<(f64, usize)>, // (new bandwidth, new split)
+    pub elapsed: Duration,
+}
+
+/// Run the serving loop to completion (blocking; realtime clock expected,
+/// but a simulated clock also works for tests — sleeps become offsets).
+pub fn serve(
+    strategy: &Strategy,
+    env: &Arc<EdgeCloudEnv>,
+    monitor: &NetworkMonitor,
+    planner: &Planner,
+    cfg: ServerConfig,
+) -> Result<ServeReport> {
+    let router = strategy.router();
+    let batcher = Arc::new(Batcher::new(cfg.queue_capacity, cfg.drain_max));
+    let stop = Arc::new(AtomicBool::new(false));
+    let clock = env.clock.clone();
+    let started = clock.now();
+    let report = Arc::new(Mutex::new(ServeReport::default()));
+    // The PJRT handles inside Router/Pipeline are not Send, so the camera
+    // thread counts into plain atomics that are reconciled into the
+    // router's stats afterwards. `in_downtime` mirrors the router flag for
+    // drop attribution.
+    let produced = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let rejected_dt = Arc::new(AtomicU64::new(0));
+    let in_downtime = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| -> Result<()> {
+        // Camera thread: paces frames into the batcher; full queue = drop.
+        {
+            let batcher = batcher.clone();
+            let stop = stop.clone();
+            let clock = clock.clone();
+            let input_shape = env.manifest.input_shape.clone();
+            let fps = cfg.fps;
+            let run_for = cfg.run_for;
+            let seed = env.cfg.seed;
+            let produced = produced.clone();
+            let rejected = rejected.clone();
+            let rejected_dt = rejected_dt.clone();
+            let in_downtime = in_downtime.clone();
+            scope.spawn(move || {
+                let mut cam = FrameSource::new(&input_shape, fps, seed);
+                while !stop.load(Ordering::Acquire) && clock.now() - started < run_for {
+                    let frame = cam.next_frame();
+                    let due = frame.captured_at + cam.interval();
+                    produced.fetch_add(1, Ordering::Relaxed);
+                    if batcher.offer(frame) == Offer::Rejected {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        if in_downtime.load(Ordering::Acquire) {
+                            rejected_dt.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let now = clock.now() - started;
+                    if due > now {
+                        std::thread::sleep((due - now).min(Duration::from_millis(200)));
+                    }
+                }
+                stop.store(true, Ordering::Release);
+            });
+        }
+
+        // Serving + control loop (this thread — the PJRT client and its
+        // executables are not Send, so ALL inference stays here; the
+        // camera thread only produces plain frame data).
+        while !stop.load(Ordering::Acquire) && clock.now() - started < cfg.run_for {
+            // Control: monitor -> policy -> planner -> strategy.
+            let now = clock.now() - started;
+            let observed = monitor.poll(now);
+            if let Some(change) = cfg.policy.filter(now, observed) {
+                let current = router.active().split;
+                if let Some(plan) = planner.should_repartition(current, change.to_mbps) {
+                    in_downtime.store(true, Ordering::Release);
+                    let rec = strategy.repartition(plan.split)?;
+                    in_downtime.store(false, Ordering::Release);
+                    let mut r = report.lock().unwrap();
+                    r.downtimes.push(rec);
+                    r.repartitions.push((change.to_mbps, plan.split));
+                }
+            }
+
+            // Serve: drain up to drain_max queued frames.
+            let frames = batcher.drain_wait(cfg.poll_every);
+            for frame in frames {
+                let Ok(lit) = env.frame_literal(&frame) else { continue };
+                if router.is_paused() {
+                    router.stats.dropped(router.in_downtime());
+                    continue;
+                }
+                match router.active().infer(&lit) {
+                    Ok(rep) => {
+                        router.latency.record(rep.total());
+                        router.stats.processed();
+                    }
+                    Err(_) => router.stats.dropped(router.in_downtime()),
+                }
+            }
+        }
+        stop.store(true, Ordering::Release);
+        Ok(())
+    })?;
+
+    // Reconcile the camera thread's counters into the router stats.
+    for _ in 0..produced.load(Ordering::Relaxed) {
+        router.stats.produced();
+    }
+    let dt = rejected_dt.load(Ordering::Relaxed);
+    for i in 0..rejected.load(Ordering::Relaxed) {
+        router.stats.dropped(i < dt);
+    }
+
+    let mut r = Arc::try_unwrap(report)
+        .map_err(|_| anyhow::anyhow!("report still shared"))?
+        .into_inner()
+        .unwrap();
+    r.elapsed = clock.now() - started;
+    Ok(r)
+}

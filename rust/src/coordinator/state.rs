@@ -1,0 +1,107 @@
+//! Pipeline lifecycle state machine.
+//!
+//! Transitions are validated: an illegal transition is a coordinator bug
+//! and fails loudly rather than silently corrupting an experiment.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineState {
+    /// Containers starting / chains compiling.
+    Initialising,
+    /// Built and warm, not receiving traffic (Scenario A standby).
+    Standby,
+    /// Receiving routed traffic.
+    Active,
+    /// Paused by the baseline approach (no traffic processed).
+    Paused,
+    /// Being replaced; drains in-flight work.
+    Draining,
+    /// Stopped; resources released.
+    Terminated,
+}
+
+impl fmt::Display for PipelineState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PipelineState::Initialising => "initialising",
+            PipelineState::Standby => "standby",
+            PipelineState::Active => "active",
+            PipelineState::Paused => "paused",
+            PipelineState::Draining => "draining",
+            PipelineState::Terminated => "terminated",
+        };
+        f.write_str(s)
+    }
+}
+
+impl PipelineState {
+    /// Whether `self -> to` is a legal lifecycle transition.
+    pub fn can_transition(self, to: PipelineState) -> bool {
+        use PipelineState::*;
+        matches!(
+            (self, to),
+            (Initialising, Standby)
+                | (Initialising, Active)
+                | (Standby, Active)
+                | (Active, Paused)
+                | (Paused, Active)
+                | (Active, Draining)
+                | (Active, Standby)
+                | (Draining, Standby)
+                | (Draining, Terminated)
+                | (Standby, Terminated)
+                | (Paused, Terminated)
+        )
+    }
+
+    /// Can this pipeline process a frame right now?
+    pub fn serves_traffic(self) -> bool {
+        matches!(self, PipelineState::Active | PipelineState::Draining)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PipelineState::*;
+
+    #[test]
+    fn legal_lifecycle_paths() {
+        // Baseline: active -> paused -> active.
+        assert!(Active.can_transition(Paused));
+        assert!(Paused.can_transition(Active));
+        // Dynamic switching: init -> standby -> active -> draining -> term.
+        assert!(Initialising.can_transition(Standby));
+        assert!(Standby.can_transition(Active));
+        assert!(Active.can_transition(Draining));
+        assert!(Draining.can_transition(Terminated));
+        // Scenario A swap: old active pipeline becomes the new standby.
+        assert!(Active.can_transition(Standby));
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        assert!(!Terminated.can_transition(Active));
+        assert!(!Paused.can_transition(Standby));
+        assert!(!Initialising.can_transition(Paused));
+        assert!(!Standby.can_transition(Paused));
+        assert!(!Terminated.can_transition(Initialising));
+    }
+
+    #[test]
+    fn traffic_gating() {
+        assert!(Active.serves_traffic());
+        assert!(Draining.serves_traffic());
+        assert!(!Paused.serves_traffic());
+        assert!(!Standby.serves_traffic());
+        assert!(!Initialising.serves_traffic());
+        assert!(!Terminated.serves_traffic());
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(Active.to_string(), "active");
+        assert_eq!(Initialising.to_string(), "initialising");
+    }
+}

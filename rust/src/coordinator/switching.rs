@@ -1,0 +1,214 @@
+//! Dynamic Switching (§III-B) — the paper's contribution.
+//!
+//! Instead of freezing the running pipeline, a second edge-cloud pipeline
+//! with the new partitions is made available and incoming requests are
+//! atomically redirected to it. The original pipeline keeps serving
+//! (degraded) until the switch, so "downtime" is a quality-degradation
+//! window, not a blackout.
+//!
+//! * **Scenario A** — a redundant pipeline is always running; downtime is
+//!   just the router switch (Equation 3, sub-millisecond).
+//! * **Scenario B Case 1** — new containers are started on both hosts when
+//!   the speed changes; downtime = container init + model load + switch
+//!   (Equation 4).
+//! * **Scenario B Case 2** — the new pipeline is launched inside the
+//!   existing containers; downtime = model load + switch (Equation 5).
+//!
+//! Case 1 doubles the memory footprint (permanently for A, transiently for
+//! B); Case 2 stays within the baseline footprint (Table I).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::DowntimeRecord;
+
+use super::pipeline::{EdgeCloudEnv, Pipeline, Placement};
+use super::router::Router;
+use super::state::PipelineState;
+
+/// Case 1 (new container) vs Case 2 (existing container) of §III-B3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementCase {
+    NewContainer,
+    SameContainer,
+}
+
+/// Scenario A: hot-standby redundant pipeline.
+pub struct ScenarioA {
+    pub env: Arc<EdgeCloudEnv>,
+    pub router: Arc<Router>,
+    pub case: PlacementCase,
+    standby: Mutex<Option<Arc<Pipeline>>>,
+}
+
+impl ScenarioA {
+    /// Deploy the active pipeline at `active_split` and a warm standby at
+    /// `standby_split` (the optimum for the *other* network condition).
+    pub fn deploy(
+        env: Arc<EdgeCloudEnv>,
+        active_split: usize,
+        standby_split: usize,
+        case: PlacementCase,
+    ) -> Result<Self> {
+        let active = Arc::new(env.build_pipeline(active_split, Placement::NewContainers)?);
+        let router = Arc::new(Router::new(env.clock.clone(), active.clone())?);
+        let placement = match case {
+            PlacementCase::NewContainer => Placement::NewContainers,
+            PlacementCase::SameContainer => Placement::Existing {
+                edge: active.edge_container.clone(),
+                cloud: active.cloud_container.clone(),
+            },
+        };
+        let standby = Arc::new(env.build_pipeline(standby_split, placement)?);
+        standby.transition(PipelineState::Standby)?;
+        // Proactive: precompile every unit on both domains so later
+        // ensure_standby() rebuilds never pay compilation.
+        env.warm_executables()?;
+        Ok(ScenarioA { env, router, case, standby: Mutex::new(Some(standby)) })
+    }
+
+    pub fn standby_split(&self) -> Option<usize> {
+        self.standby.lock().unwrap().as_ref().map(|p| p.split)
+    }
+
+    /// Switch traffic to the standby pipeline. Downtime = t_switch
+    /// (Equation 3). The displaced pipeline becomes the new standby (it
+    /// already holds the right partitions for the reverse toggle).
+    pub fn switch(&self) -> Result<DowntimeRecord> {
+        let clock = &self.env.clock;
+        let sim0 = clock.simulated_component();
+        let t0 = clock.now();
+        let mut rec = DowntimeRecord::default();
+
+        self.router.set_downtime(true);
+        let standby = self
+            .standby
+            .lock()
+            .unwrap()
+            .take()
+            .context("no standby pipeline available")?;
+        let (old, t_switch) = self.router.switch(standby)?;
+        rec.push_phase("switch", t_switch);
+        self.router.set_downtime(false);
+
+        rec.total = clock.now() - t0;
+        rec.simulated = clock.simulated_component() - sim0;
+
+        // Outside the downtime window: recycle the displaced pipeline as
+        // the new standby.
+        old.transition(PipelineState::Standby)?;
+        *self.standby.lock().unwrap() = Some(old);
+        Ok(rec)
+    }
+
+    /// Rebuild the standby at a different split (background work after a
+    /// plan change; NOT part of any downtime window). Returns the rebuild
+    /// duration.
+    pub fn ensure_standby(&self, split: usize) -> Result<Duration> {
+        let current = self.standby_split();
+        if current == Some(split) {
+            return Ok(Duration::ZERO);
+        }
+        let clock = &self.env.clock;
+        let t0 = clock.now();
+        let old = self.standby.lock().unwrap().take();
+        if let Some(p) = old {
+            p.transition(PipelineState::Terminated)?;
+            if self.case == PlacementCase::NewContainer {
+                self.env.edge_host.stop(&p.edge_container);
+                self.env.cloud_host.stop(&p.cloud_container);
+            }
+        }
+        let active = self.router.active();
+        let placement = match self.case {
+            PlacementCase::NewContainer => Placement::NewContainers,
+            PlacementCase::SameContainer => Placement::Existing {
+                edge: active.edge_container.clone(),
+                cloud: active.cloud_container.clone(),
+            },
+        };
+        let standby = Arc::new(self.env.build_pipeline(split, placement)?);
+        standby.transition(PipelineState::Standby)?;
+        *self.standby.lock().unwrap() = Some(standby);
+        Ok(clock.now() - t0)
+    }
+}
+
+/// Scenario B: the second pipeline is created only when the speed changes.
+pub struct ScenarioB {
+    pub env: Arc<EdgeCloudEnv>,
+    pub router: Arc<Router>,
+    pub case: PlacementCase,
+}
+
+impl ScenarioB {
+    pub fn deploy(env: Arc<EdgeCloudEnv>, initial_split: usize) -> Result<ScenarioBBuilder> {
+        let active = Arc::new(env.build_pipeline(initial_split, Placement::NewContainers)?);
+        let router = Arc::new(Router::new(env.clock.clone(), active)?);
+        // Proactive (§III-B): precompile every unit on both domains at
+        // deployment so the repartition window never pays compilation.
+        env.warm_executables()?;
+        Ok(ScenarioBBuilder { env, router })
+    }
+
+    /// Repartition to `new_split`: initialise the second pipeline (per the
+    /// case), then switch. Downtime = t_init + t_switch (Eq 4) or
+    /// t_exec + t_switch (Eq 5). The old pipeline serves throughout.
+    pub fn repartition(&self, new_split: usize) -> Result<DowntimeRecord> {
+        let clock = &self.env.clock;
+        let sim0 = clock.simulated_component();
+        let t0 = clock.now();
+        let mut rec = DowntimeRecord::default();
+
+        self.router.set_downtime(true);
+        let old_active = self.router.active();
+
+        let placement = match self.case {
+            PlacementCase::NewContainer => Placement::NewContainers,
+            PlacementCase::SameContainer => Placement::Existing {
+                edge: old_active.edge_container.clone(),
+                cloud: old_active.cloud_container.clone(),
+            },
+        };
+        let new_pipe = Arc::new(self.env.build_pipeline(new_split, placement)?);
+        let t_init = clock.now() - t0;
+        rec.push_phase(
+            match self.case {
+                PlacementCase::NewContainer => "initialisation",
+                PlacementCase::SameContainer => "exec",
+            },
+            t_init,
+        );
+
+        let (old, t_switch) = self.router.switch(new_pipe)?;
+        rec.push_phase("switch", t_switch);
+        self.router.set_downtime(false);
+
+        rec.total = clock.now() - t0;
+        rec.simulated = clock.simulated_component() - sim0;
+
+        // Retire the displaced pipeline (outside the downtime window);
+        // Case 1 releases its containers, ending the transient 2x memory.
+        old.transition(PipelineState::Terminated)?;
+        if self.case == PlacementCase::NewContainer && !Arc::ptr_eq(&old, &self.router.active()) {
+            self.env.edge_host.stop(&old.edge_container);
+            self.env.cloud_host.stop(&old.cloud_container);
+        }
+        Ok(rec)
+    }
+}
+
+/// Intermediate so callers pick the case after deploy (both cases share
+/// the deployed initial pipeline).
+pub struct ScenarioBBuilder {
+    pub env: Arc<EdgeCloudEnv>,
+    pub router: Arc<Router>,
+}
+
+impl ScenarioBBuilder {
+    pub fn with_case(self, case: PlacementCase) -> ScenarioB {
+        ScenarioB { env: self.env, router: self.router, case }
+    }
+}

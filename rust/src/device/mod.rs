@@ -1,0 +1,139 @@
+//! Device model: the video camera (a Raspberry Pi 3B+ in the paper)
+//! streaming frames to the edge server.
+//!
+//! Frames are synthetic but deterministic: a per-frame gradient pattern
+//! plus seeded noise, normalised like camera RGB input. The source is a
+//! pull-based generator so both the simulated sweeps (frame timestamps on
+//! the virtual timeline) and the realtime serving example (a thread pacing
+//! `next()` at the configured FPS) share one implementation.
+
+use std::time::Duration;
+
+use crate::util::prng::Prng;
+
+/// One captured video frame.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: u64,
+    /// Capture timestamp on the experiment timeline.
+    pub captured_at: Duration,
+    /// NHWC f32 pixels in [0, 1].
+    pub pixels: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+/// Deterministic synthetic camera.
+pub struct FrameSource {
+    shape: Vec<usize>,
+    fps: f64,
+    seed: u64,
+    next_id: u64,
+}
+
+impl FrameSource {
+    /// `shape` is the model input shape (e.g. `[1, 64, 64, 3]`).
+    pub fn new(shape: &[usize], fps: f64, seed: u64) -> Self {
+        assert!(fps > 0.0, "fps must be positive");
+        assert_eq!(shape.len(), 4, "expected NHWC shape");
+        FrameSource { shape: shape.to_vec(), fps, seed, next_id: 0 }
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.fps
+    }
+
+    /// Capture interval between consecutive frames.
+    pub fn interval(&self) -> Duration {
+        Duration::from_secs_f64(1.0 / self.fps)
+    }
+
+    /// Timestamp at which frame `id` is captured.
+    pub fn capture_time(&self, id: u64) -> Duration {
+        Duration::from_secs_f64(id as f64 / self.fps)
+    }
+
+    /// Generate the next frame (deterministic in `(seed, id)`).
+    pub fn next_frame(&mut self) -> Frame {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.frame(id)
+    }
+
+    /// Generate frame `id` without advancing the stream.
+    pub fn frame(&self, id: u64) -> Frame {
+        let (_, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let mut rng = Prng::new(self.seed ^ (id.wrapping_mul(0x9E37_79B9)));
+        let mut pixels = Vec::with_capacity(h * w * c);
+        // Moving diagonal gradient (scene motion) + per-pixel sensor noise.
+        let phase = (id % 97) as f32 / 97.0;
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    let g = ((x + y) as f32 / (h + w) as f32 + phase + ch as f32 * 0.1) % 1.0;
+                    let noise = rng.next_f32_range(-0.05, 0.05);
+                    pixels.push((g + noise).clamp(0.0, 1.0));
+                }
+            }
+        }
+        Frame { id, captured_at: self.capture_time(id), pixels, shape: self.shape.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src() -> FrameSource {
+        FrameSource::new(&[1, 8, 8, 3], 15.0, 42)
+    }
+
+    #[test]
+    fn frame_sized_to_shape() {
+        let f = src().frame(0);
+        assert_eq!(f.pixels.len(), 8 * 8 * 3);
+        assert_eq!(f.shape, vec![1, 8, 8, 3]);
+    }
+
+    #[test]
+    fn deterministic_per_id() {
+        let a = src().frame(5);
+        let b = src().frame(5);
+        assert_eq!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn frames_differ() {
+        let s = src();
+        assert_ne!(s.frame(1).pixels, s.frame(2).pixels);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        for p in src().frame(3).pixels {
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+
+    #[test]
+    fn capture_times_paced_by_fps() {
+        let s = src();
+        assert_eq!(s.capture_time(0), Duration::ZERO);
+        let dt = s.capture_time(15) - s.capture_time(0);
+        assert!((dt.as_secs_f64() - 1.0).abs() < 1e-9);
+        // Duration has nanosecond resolution; allow that rounding.
+        assert!((s.interval().as_secs_f64() - 1.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn next_frame_advances() {
+        let mut s = src();
+        assert_eq!(s.next_frame().id, 0);
+        assert_eq!(s.next_frame().id, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_fps() {
+        FrameSource::new(&[1, 8, 8, 3], 0.0, 0);
+    }
+}

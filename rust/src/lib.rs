@@ -1,0 +1,37 @@
+//! # NEUKONFIG
+//!
+//! Reproduction of *"NEUKONFIG: Reducing Edge Service Downtime When
+//! Repartitioning DNNs"* (Majeed, Kilpatrick, Spence, Varghese — IEEE IC2E
+//! 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build-time Python)** — VGG-19 and MobileNetV2 defined layer-
+//!   by-layer in JAX over Pallas kernels, AOT-lowered to one HLO module per
+//!   partition unit (`python/compile/`).
+//! * **L3 (this crate)** — the NEUKONFIG coordinator: edge-cloud pipelines,
+//!   the Pause-and-Resume baseline, the Dynamic Switching approaches
+//!   (Scenario A/B × Case 1/2), request routing, the repartition planner,
+//!   and every substrate the paper's testbed provided (network emulation,
+//!   container lifecycle, stress control, metrics).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts via the PJRT C API and executes them natively.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod clock;
+pub mod config;
+pub mod container;
+pub mod coordinator;
+pub mod device;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod profiler;
+pub mod runtime;
+pub mod stress;
+pub mod util;
+
+pub use clock::Clock;
+pub use config::ExperimentConfig;

@@ -1,0 +1,316 @@
+//! NEUKONFIG CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; no clap offline):
+//!
+//! ```text
+//! neukonfig profile  [--model vgg19|mobilenetv2] [--reps N]
+//! neukonfig sweep    [--model M] [--bw MBPS]         # Fig 2/3 rows
+//! neukonfig downtime [--model M] --approach A [--to-low|--to-high]
+//! neukonfig table1   [--model M]                     # Table I
+//! neukonfig info                                     # artifact inventory
+//! ```
+
+use std::process::ExitCode;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use neukonfig::coordinator::experiments::{
+    downtime_grid, partition_sweep, split_pair, table1_memory, Approach, ExperimentSetup,
+};
+use neukonfig::coordinator::PlacementCase;
+use neukonfig::metrics::{fmt_duration, Table};
+use neukonfig::models::default_artifacts_dir;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:?}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), rest[i + 1].clone()));
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Args { cmd, flags, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let model = args.get("model").unwrap_or("vgg19").to_string();
+
+    match args.cmd.as_str() {
+        "info" => info(),
+        "profile" => profile(&model, args.get("reps").map_or(3, |r| r.parse().unwrap_or(3))),
+        "sweep" => {
+            let bw: f64 = args.get("bw").map_or(20.0, |b| b.parse().unwrap_or(20.0));
+            sweep(&model, bw)
+        }
+        "downtime" => {
+            let approach = parse_approach(args.get("approach").unwrap_or("pause-resume"))?;
+            downtime(&model, approach, !args.has("to-high"), args.has("no-sim-costs"))
+        }
+        "table1" => table1(&model),
+        "serve" => {
+            let strategy = args.get("strategy").unwrap_or("scenario-a-case2").to_string();
+            let fps: f64 = args.get("fps").map_or(15.0, |v| v.parse().unwrap_or(15.0));
+            let secs: u64 = args.get("seconds").map_or(15, |v| v.parse().unwrap_or(15));
+            let period: u64 = args.get("period-s").map_or(5, |v| v.parse().unwrap_or(5));
+            serve_cmd(&model, &strategy, fps, secs, period)
+        }
+        "help" | _ => {
+            println!(
+                "neukonfig — reducing edge service downtime when repartitioning DNNs\n\n\
+                 usage: neukonfig <info|profile|sweep|downtime|table1|serve> [--model vgg19|mobilenetv2]\n\
+                 serve flags: --strategy <name> --fps N --seconds N --period-s N\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve_cmd(model: &str, strategy: &str, fps: f64, secs: u64, period: u64) -> Result<()> {
+    use neukonfig::clock::Clock;
+    use neukonfig::coordinator::server::{serve, ServerConfig, Strategy};
+    use neukonfig::coordinator::{EdgeCloudEnv, NetworkMonitor, Planner, TriggerPolicy};
+    use neukonfig::netsim::Schedule;
+    use std::sync::Arc;
+
+    let setup = ExperimentSetup::load()?;
+    let manifest = setup.manifest(model)?;
+    let env = Arc::new(EdgeCloudEnv::new(setup.cfg.clone(), manifest, Clock::realtime())?);
+    let profile = neukonfig::profiler::default_analytic(&env.manifest);
+    let planner = Planner::new(profile, setup.cfg.network.latency);
+    let hi = planner.plan(setup.cfg.network.high_mbps).split;
+    let lo = planner.plan(setup.cfg.network.low_mbps).split;
+
+    eprintln!("deploying {strategy} (splits {hi}<->{lo})...");
+    let strat = Strategy::deploy(strategy, env.clone(), hi, lo)?;
+    let monitor = NetworkMonitor::new(
+        env.link.clone(),
+        Schedule::toggle(
+            setup.cfg.network.high_mbps,
+            setup.cfg.network.low_mbps,
+            Duration::from_secs(period),
+            (secs / period.max(1)) as usize,
+        ),
+    );
+    let report = serve(
+        &strat,
+        &env,
+        &monitor,
+        &planner,
+        ServerConfig {
+            fps,
+            run_for: Duration::from_secs(secs),
+            policy: TriggerPolicy::immediate(),
+            ..Default::default()
+        },
+    )?;
+
+    let router = strat.router();
+    let s = router.stats.snapshot();
+    println!("served {:.1}s: {} produced, {} processed, {} dropped",
+        report.elapsed.as_secs_f64(), s.produced, s.processed, s.dropped);
+    for (i, d) in report.downtimes.iter().enumerate() {
+        println!(
+            "repartition {} -> split {} @ {} Mbps: downtime {} (real {}, sim {})",
+            i + 1,
+            report.repartitions[i].1,
+            report.repartitions[i].0,
+            fmt_duration(d.total),
+            fmt_duration(d.real()),
+            fmt_duration(d.simulated)
+        );
+    }
+    if let Some(sum) = router.latency.summary() {
+        println!(
+            "latency mean {} p95 {}",
+            fmt_duration(Duration::from_secs_f64(sum.mean)),
+            fmt_duration(Duration::from_secs_f64(sum.p95))
+        );
+    }
+    Ok(())
+}
+
+fn parse_approach(s: &str) -> Result<Approach> {
+    Ok(match s {
+        "pause-resume" => Approach::PauseResume,
+        "scenario-a-case1" => Approach::ScenarioA(PlacementCase::NewContainer),
+        "scenario-a-case2" => Approach::ScenarioA(PlacementCase::SameContainer),
+        "scenario-b-case1" => Approach::ScenarioB(PlacementCase::NewContainer),
+        "scenario-b-case2" => Approach::ScenarioB(PlacementCase::SameContainer),
+        other => bail!("unknown approach {other:?}"),
+    })
+}
+
+fn info() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let setup = ExperimentSetup::load().context("loading artifacts")?;
+    println!("artifacts: {}", dir.display());
+    println!("width={} input={}px", setup.index.width, setup.index.hw);
+    for name in &setup.index.models {
+        let m = setup.manifest(name)?;
+        println!(
+            "  {name}: {} units, {:.1} MB weights, {:.1} MFLOP",
+            m.num_layers(),
+            m.weights_bytes as f64 / 1e6,
+            m.total_flops as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn profile(model: &str, reps: usize) -> Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env(model)?;
+    let prof = setup.measured_profile(&env, reps)?;
+    let mut t = Table::new(
+        &format!("{model} per-layer profile"),
+        &["#", "layer", "kind", "edge", "cloud", "out KB"],
+    );
+    for l in &prof.layers {
+        t.row(vec![
+            l.index.to_string(),
+            l.name.clone(),
+            l.kind.clone(),
+            fmt_duration(l.edge_time),
+            fmt_duration(l.cloud_time),
+            format!("{:.1}", l.output_bytes as f64 / 1024.0),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn sweep(model: &str, bw: f64) -> Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let env = setup.env(model)?;
+    let prof = setup.measured_profile(&env, 3)?;
+    let rows = partition_sweep(&prof, bw, setup.cfg.network.latency);
+    let mut t = Table::new(
+        &format!("{model} partition sweep @ {bw} Mbps (Fig 2/3)"),
+        &["split", "layer", "edge", "transfer", "cloud", "total", "out KB", "opt"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.split.to_string(),
+            r.layer,
+            fmt_duration(Duration::from_secs_f64(r.edge_s)),
+            fmt_duration(Duration::from_secs_f64(r.transfer_s)),
+            fmt_duration(Duration::from_secs_f64(r.cloud_s)),
+            fmt_duration(Duration::from_secs_f64(r.total_s)),
+            format!("{:.1}", r.out_kb),
+            if r.optimal { "*".into() } else { String::new() },
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn downtime(model: &str, approach: Approach, to_low: bool, no_sim: bool) -> Result<()> {
+    let mut setup = ExperimentSetup::load()?;
+    if no_sim {
+        setup.cfg = setup.cfg.clone().without_sim_costs();
+    }
+    let env = setup.env(model)?;
+    let prof = setup.measured_profile(&env, 2)?;
+    let pair = split_pair(&prof, &setup.cfg);
+    println!(
+        "splits: {}@{}Mbps -> {}@{}Mbps",
+        pair.at_high, setup.cfg.network.high_mbps, pair.at_low, setup.cfg.network.low_mbps
+    );
+    let (from, to) = if to_low {
+        (setup.cfg.network.high_mbps, setup.cfg.network.low_mbps)
+    } else {
+        (setup.cfg.network.low_mbps, setup.cfg.network.high_mbps)
+    };
+    let cells = downtime_grid(&env, &prof, approach, from, to)?;
+    let mut t = Table::new(
+        &format!("{} downtime, {}->{} Mbps", approach.label(), from, to),
+        &["cpu %", "mem %", "downtime", "real", "simulated"],
+    );
+    for c in cells {
+        match c.downtime {
+            Some(d) => t.row(vec![
+                format!("{:.0}", c.cpu_avail * 100.0),
+                format!("{:.0}", c.mem_avail * 100.0),
+                fmt_duration(d.total),
+                fmt_duration(d.real()),
+                fmt_duration(d.simulated),
+            ]),
+            None => t.row(vec![
+                format!("{:.0}", c.cpu_avail * 100.0),
+                format!("{:.0}", c.mem_avail * 100.0),
+                "OOM".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn table1(model: &str) -> Result<()> {
+    let setup = ExperimentSetup::load()?;
+    let rows = table1_memory(&setup, model)?;
+    let mut t = Table::new(
+        "Table I: memory required per approach",
+        &["approach", "initial MB", "additional MB", "total peak MB", "transient"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.approach.to_string(),
+            format!("{:.1}", r.initial_mb),
+            format!("{:.1}", r.additional_mb),
+            format!("{:.1}", r.peak_mb),
+            if r.transient { "yes (switching only)".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! Metrics: downtime records, frame accounting, latency histograms, and
+//! markdown table rendering for the experiment reports.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// A measured service-downtime window, decomposed the way DESIGN.md
+//  §Substitutions promises: real work vs simulated Docker offsets.
+#[derive(Debug, Clone, Default)]
+pub struct DowntimeRecord {
+    /// Total downtime on the experiment timeline.
+    pub total: Duration,
+    /// Simulated (container control-plane) component.
+    pub simulated: Duration,
+    /// Named phases, in order (e.g. "pause", "rebuild-edge", "switch").
+    pub phases: Vec<(String, Duration)>,
+}
+
+impl DowntimeRecord {
+    pub fn real(&self) -> Duration {
+        self.total.saturating_sub(self.simulated)
+    }
+
+    pub fn phase(&self, name: &str) -> Option<Duration> {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+    }
+
+    pub fn push_phase(&mut self, name: impl Into<String>, d: Duration) {
+        self.phases.push((name.into(), d));
+    }
+}
+
+/// Frame accounting over an experiment run.
+#[derive(Debug, Default)]
+pub struct FrameStats {
+    inner: Mutex<FrameStatsInner>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct FrameStatsInner {
+    pub produced: u64,
+    pub processed: u64,
+    pub dropped: u64,
+    /// Frames dropped specifically inside a downtime window.
+    pub dropped_during_downtime: u64,
+}
+
+impl FrameStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn produced(&self) {
+        self.inner.lock().unwrap().produced += 1;
+    }
+
+    pub fn processed(&self) {
+        self.inner.lock().unwrap().processed += 1;
+    }
+
+    pub fn dropped(&self, during_downtime: bool) {
+        let mut s = self.inner.lock().unwrap();
+        s.dropped += 1;
+        if during_downtime {
+            s.dropped_during_downtime += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> FrameStatsInner {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+impl FrameStatsInner {
+    /// Drop rate over all produced frames.
+    pub fn drop_rate(&self) -> f64 {
+        if self.produced == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.produced as f64
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (1 us .. ~100 s), lock-free enough for
+/// the request path via a mutex over u64 buckets (contention is per-frame,
+/// far below PJRT execution cost).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Mutex<Vec<u64>>,
+    samples: Mutex<Vec<f64>>,
+    keep_samples: bool,
+}
+
+const BUCKETS_PER_DECADE: usize = 10;
+const DECADES: usize = 8; // 1us .. 100s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(keep_samples: bool) -> Self {
+        LatencyHistogram {
+            buckets: Mutex::new(vec![0; BUCKETS_PER_DECADE * DECADES + 1]),
+            samples: Mutex::new(Vec::new()),
+            keep_samples,
+        }
+    }
+
+    fn bucket_of(d: Duration) -> usize {
+        let us = d.as_secs_f64() * 1e6;
+        if us < 1.0 {
+            return 0;
+        }
+        let idx = (us.log10() * BUCKETS_PER_DECADE as f64) as usize;
+        idx.min(BUCKETS_PER_DECADE * DECADES)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let idx = Self::bucket_of(d);
+        self.buckets.lock().unwrap()[idx] += 1;
+        if self.keep_samples {
+            self.samples.lock().unwrap().push(d.as_secs_f64());
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.lock().unwrap().iter().sum()
+    }
+
+    /// Exact summary when samples are kept, else None.
+    pub fn summary(&self) -> Option<Summary> {
+        let s = self.samples.lock().unwrap();
+        Summary::of(&s)
+    }
+
+    /// Approximate quantile from the histogram buckets (upper bound of the
+    /// bucket containing the quantile).
+    pub fn quantile_approx(&self, q: f64) -> Option<Duration> {
+        let buckets = self.buckets.lock().unwrap();
+        let total: u64 = buckets.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let upper_us = 10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64);
+                return Some(Duration::from_secs_f64(upper_us / 1e6));
+            }
+        }
+        None
+    }
+}
+
+/// Markdown table builder for experiment reports.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.headers.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Human-friendly duration rendering for reports.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downtime_decomposition() {
+        let mut d = DowntimeRecord {
+            total: Duration::from_millis(700),
+            simulated: Duration::from_millis(300),
+            phases: vec![],
+        };
+        d.push_phase("pause", Duration::from_millis(300));
+        d.push_phase("rebuild", Duration::from_millis(400));
+        assert_eq!(d.real(), Duration::from_millis(400));
+        assert_eq!(d.phase("pause"), Some(Duration::from_millis(300)));
+        assert_eq!(d.phase("nope"), None);
+    }
+
+    #[test]
+    fn frame_stats_counts() {
+        let f = FrameStats::new();
+        for _ in 0..10 {
+            f.produced();
+        }
+        for _ in 0..7 {
+            f.processed();
+        }
+        f.dropped(true);
+        f.dropped(false);
+        let s = f.snapshot();
+        assert_eq!(s.produced, 10);
+        assert_eq!(s.processed, 7);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.dropped_during_downtime, 1);
+        assert!((s.drop_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::default();
+        for ms in [1u64, 2, 3, 10, 20, 100, 200, 500] {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile_approx(0.5).unwrap();
+        let p99 = h.quantile_approx(0.99).unwrap();
+        assert!(p50 <= p99);
+        assert_eq!(h.count(), 8);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 8);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::default();
+        assert!(h.quantile_approx(0.5).is_none());
+        assert!(h.summary().is_none());
+    }
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00 s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.0 ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0 us");
+        assert_eq!(fmt_duration(Duration::from_nanos(42)), "42 ns");
+    }
+}

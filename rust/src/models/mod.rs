@@ -1,0 +1,353 @@
+//! Model manifests: the Rust-side view of the artifacts emitted by
+//! `python/compile/aot.py`.
+//!
+//! A model is a chain of *partition units* (layers for VGG-19, blocks for
+//! MobileNetV2 — see the paper §II-A); each unit has its own HLO module,
+//! parameter slice in `weights.bin`, and metadata (shapes, FLOPs, output
+//! bytes). A partition at split `k` assigns units `[0, k)` to the edge and
+//! `[k, N)` to the cloud; `k = 0` is cloud-only, `k = N` edge-only.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One parameter tensor of a unit, with its slice in `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// One partition unit (layer or block).
+#[derive(Debug, Clone)]
+pub struct LayerManifest {
+    pub index: usize,
+    pub name: String,
+    pub kind: String,
+    /// HLO text file, relative to the model directory.
+    pub hlo: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub output_bytes: usize,
+    pub flops: u64,
+    pub params: Vec<ParamEntry>,
+}
+
+impl LayerManifest {
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.size_bytes).sum()
+    }
+}
+
+/// A fused-partition artifact pair (ablation; DESIGN.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedEntry {
+    pub split: usize,
+    pub edge_hlo: Option<String>,
+    pub cloud_hlo: Option<String>,
+}
+
+/// A full model manifest (one DNN).
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub weights_bytes: usize,
+    pub total_flops: u64,
+    pub layers: Vec<LayerManifest>,
+    /// Fused-partition ablation artifacts (may be empty).
+    pub fused: Vec<FusedEntry>,
+    /// Directory holding the HLO files and weights.bin.
+    pub dir: PathBuf,
+}
+
+impl ModelManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v, dir)
+    }
+
+    fn from_json(v: &Value, dir: PathBuf) -> Result<Self> {
+        let name = req_str(v, "name")?;
+        let layers_v = v
+            .get("layers")
+            .as_array()
+            .context("manifest missing `layers`")?;
+        let mut layers = Vec::with_capacity(layers_v.len());
+        for (i, lv) in layers_v.iter().enumerate() {
+            let layer = LayerManifest {
+                index: lv.get("index").as_usize().context("layer missing index")?,
+                name: req_str(lv, "name")?,
+                kind: req_str(lv, "kind")?,
+                hlo: req_str(lv, "hlo")?,
+                input_shape: shape(lv.get("input_shape"))?,
+                output_shape: shape(lv.get("output_shape"))?,
+                output_bytes: lv
+                    .get("output_bytes")
+                    .as_usize()
+                    .context("layer missing output_bytes")?,
+                flops: lv.get("flops").as_i64().unwrap_or(0) as u64,
+                params: params(lv.get("params"))?,
+            };
+            if layer.index != i {
+                bail!("layer index {} out of order (expected {i})", layer.index);
+            }
+            layers.push(layer);
+        }
+        // Shape chaining invariant: unit k's output feeds unit k+1.
+        for w in layers.windows(2) {
+            if w[0].output_shape != w[1].input_shape {
+                bail!(
+                    "manifest shape mismatch: {}({:?}) -> {}({:?})",
+                    w[0].name,
+                    w[0].output_shape,
+                    w[1].name,
+                    w[1].input_shape
+                );
+            }
+        }
+        let fused = v
+            .get("fused")
+            .as_array()
+            .map(|arr| {
+                arr.iter()
+                    .map(|f| {
+                        Ok(FusedEntry {
+                            split: f.get("split").as_usize().context("fused split")?,
+                            edge_hlo: f.get("edge_hlo").as_str().map(str::to_owned),
+                            cloud_hlo: f.get("cloud_hlo").as_str().map(str::to_owned),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        Ok(ModelManifest {
+            name,
+            input_shape: shape(v.get("input_shape"))?,
+            weights_bytes: v
+                .get("weights_bytes")
+                .as_usize()
+                .context("manifest missing weights_bytes")?,
+            total_flops: v.get("total_flops").as_i64().unwrap_or(0) as u64,
+            layers,
+            fused,
+            dir,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Valid split points: `0..=num_layers()`.
+    pub fn valid_splits(&self) -> impl Iterator<Item = usize> {
+        0..=self.layers.len()
+    }
+
+    /// Intermediate tensor size crossing the network for split `k` (bytes).
+    /// `k = 0` ships the raw input; `k = N` ships the final output.
+    pub fn transfer_bytes(&self, split: usize) -> usize {
+        assert!(split <= self.layers.len(), "split {split} out of range");
+        if split == 0 {
+            self.input_shape.iter().product::<usize>() * 4
+        } else {
+            self.layers[split - 1].output_bytes
+        }
+    }
+
+    pub fn hlo_path(&self, index: usize) -> PathBuf {
+        self.dir.join(&self.layers[index].hlo)
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.bin")
+    }
+
+    /// Sum of parameter bytes over units `[range.start, range.end)`.
+    pub fn param_bytes_in(&self, range: std::ops::Range<usize>) -> usize {
+        self.layers[range].iter().map(|l| l.param_bytes()).sum()
+    }
+}
+
+/// Index over all exported models (`artifacts/manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub root: PathBuf,
+    pub width: f64,
+    pub hw: usize,
+    pub models: Vec<String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text)?;
+        let models = v
+            .get("models")
+            .as_object()
+            .context("index missing `models`")?
+            .keys()
+            .cloned()
+            .collect();
+        Ok(ArtifactIndex {
+            root,
+            width: v.get("width").as_f64().unwrap_or(1.0),
+            hw: v.get("hw").as_usize().unwrap_or(0),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<ModelManifest> {
+        if !self.models.iter().any(|m| m == name) {
+            bail!(
+                "model {name:?} not in artifacts (have: {:?})",
+                self.models
+            );
+        }
+        ModelManifest::load(self.root.join(name))
+    }
+}
+
+/// Default artifacts dir: `$NEUKONFIG_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NEUKONFIG_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from the executable/cwd looking for artifacts/manifest.json.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .as_str()
+        .map(str::to_owned)
+        .with_context(|| format!("missing string field `{key}`"))
+}
+
+fn shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()
+        .context("expected shape array")?
+        .iter()
+        .map(|d| d.as_usize().context("bad shape dim"))
+        .collect()
+}
+
+fn params(v: &Value) -> Result<Vec<ParamEntry>> {
+    let arr = match v.as_array() {
+        Some(a) => a,
+        None => return Ok(vec![]),
+    };
+    arr.iter()
+        .map(|p| {
+            Ok(ParamEntry {
+                name: req_str(p, "name")?,
+                shape: shape(p.get("shape"))?,
+                offset_bytes: p
+                    .get("offset_bytes")
+                    .as_usize()
+                    .context("param missing offset")?,
+                size_bytes: p
+                    .get("size_bytes")
+                    .as_usize()
+                    .context("param missing size")?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "name": "toy",
+          "input_shape": [1, 4, 4, 3],
+          "weights_bin": "weights.bin",
+          "weights_bytes": 24,
+          "total_flops": 100,
+          "layers": [
+            {"index": 0, "name": "conv1", "kind": "conv", "hlo": "layer_00.hlo.txt",
+             "input_shape": [1, 4, 4, 3], "output_shape": [1, 4, 4, 2],
+             "output_bytes": 128, "flops": 60,
+             "params": [{"name": "conv1_w", "shape": [1, 3, 2], "offset_bytes": 0, "size_bytes": 24}]},
+            {"index": 1, "name": "pool", "kind": "maxpool", "hlo": "layer_01.hlo.txt",
+             "input_shape": [1, 4, 4, 2], "output_shape": [1, 2, 2, 2],
+             "output_bytes": 32, "flops": 40, "params": []}
+          ]
+        }"#
+    }
+
+    fn parse_sample() -> ModelManifest {
+        let v = json::parse(sample_manifest()).unwrap();
+        ModelManifest::from_json(&v, PathBuf::from("/tmp/toy")).unwrap()
+    }
+
+    #[test]
+    fn parses_layers_and_params() {
+        let m = parse_sample();
+        assert_eq!(m.num_layers(), 2);
+        assert_eq!(m.layers[0].params[0].name, "conv1_w");
+        assert_eq!(m.layers[0].param_bytes(), 24);
+        assert_eq!(m.layers[1].params.len(), 0);
+    }
+
+    #[test]
+    fn transfer_bytes_per_split() {
+        let m = parse_sample();
+        assert_eq!(m.transfer_bytes(0), 4 * 4 * 3 * 4); // raw input
+        assert_eq!(m.transfer_bytes(1), 128);
+        assert_eq!(m.transfer_bytes(2), 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn transfer_bytes_rejects_out_of_range() {
+        parse_sample().transfer_bytes(3);
+    }
+
+    #[test]
+    fn valid_splits_covers_all() {
+        let m = parse_sample();
+        let splits: Vec<_> = m.valid_splits().collect();
+        assert_eq!(splits, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = sample_manifest().replace("[1, 4, 4, 2], \"output_shape\": [1, 2, 2, 2]",
+                                            "[1, 9, 9, 9], \"output_shape\": [1, 2, 2, 2]");
+        let v = json::parse(&bad).unwrap();
+        assert!(ModelManifest::from_json(&v, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn param_bytes_in_range() {
+        let m = parse_sample();
+        assert_eq!(m.param_bytes_in(0..1), 24);
+        assert_eq!(m.param_bytes_in(1..2), 0);
+        assert_eq!(m.param_bytes_in(0..2), 24);
+    }
+}

@@ -1,0 +1,229 @@
+//! Network emulation — the Linux `tc` analogue (DESIGN.md §Substitutions).
+//!
+//! The paper shapes the edge->cloud uplink with `tc` to 20 Mbps / 5 Mbps at
+//! 20 ms latency. [`Link`] reproduces that: a transfer of `b` bytes costs
+//! `latency + b*8 / bandwidth`, transfers are serialised FIFO (a single
+//! uplink), and the bandwidth can change at runtime — which is exactly the
+//! event that triggers DNN repartitioning. [`Schedule`] replays a bandwidth
+//! trace against the experiment clock.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::clock::Clock;
+
+/// A point-to-point shaped link (edge -> cloud uplink).
+pub struct Link {
+    state: Mutex<LinkState>,
+    clock: Clock,
+}
+
+#[derive(Debug, Clone)]
+struct LinkState {
+    bandwidth_mbps: f64,
+    latency: Duration,
+    /// Timeline instant at which the uplink becomes free (FIFO contention).
+    busy_until: Duration,
+    bytes_sent: u64,
+    transfers: u64,
+}
+
+impl Link {
+    pub fn new(clock: Clock, bandwidth_mbps: f64, latency: Duration) -> Self {
+        assert!(bandwidth_mbps > 0.0, "bandwidth must be positive");
+        Link {
+            state: Mutex::new(LinkState {
+                bandwidth_mbps,
+                latency,
+                busy_until: Duration::ZERO,
+                bytes_sent: 0,
+                transfers: 0,
+            }),
+            clock,
+        }
+    }
+
+    /// Pure transfer-time model (Equation 1's T_t term): latency + payload
+    /// serialisation at the current bandwidth. No side effects.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        let s = self.state.lock().unwrap();
+        transfer_time(bytes, s.bandwidth_mbps, s.latency)
+    }
+
+    /// Perform a transfer on the experiment timeline: waits for the uplink
+    /// to be free (FIFO), then for the serialisation + latency. Returns the
+    /// total time this transfer experienced (queueing included).
+    pub fn transfer(&self, bytes: usize) -> Duration {
+        let (wait, cost) = {
+            let mut s = self.state.lock().unwrap();
+            let now = self.clock.now();
+            let start = s.busy_until.max(now);
+            let cost = transfer_time(bytes, s.bandwidth_mbps, s.latency);
+            s.busy_until = start + cost;
+            s.bytes_sent += bytes as u64;
+            s.transfers += 1;
+            (start - now, cost)
+        };
+        self.clock.sleep(wait + cost);
+        wait + cost
+    }
+
+    /// Change the shaped bandwidth (the `tc` rate update that triggers
+    /// repartitioning).
+    pub fn set_bandwidth(&self, mbps: f64) {
+        assert!(mbps > 0.0);
+        self.state.lock().unwrap().bandwidth_mbps = mbps;
+    }
+
+    pub fn bandwidth_mbps(&self) -> f64 {
+        self.state.lock().unwrap().bandwidth_mbps
+    }
+
+    pub fn latency(&self) -> Duration {
+        self.state.lock().unwrap().latency
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.state.lock().unwrap().bytes_sent
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.state.lock().unwrap().transfers
+    }
+}
+
+/// latency + bytes*8/bandwidth — shared by the live link and the analytic
+/// planner (both must agree or the planner would mispredict splits).
+pub fn transfer_time(bytes: usize, bandwidth_mbps: f64, latency: Duration) -> Duration {
+    let serialisation = (bytes as f64 * 8.0) / (bandwidth_mbps * 1e6);
+    latency + Duration::from_secs_f64(serialisation)
+}
+
+/// A timed bandwidth trace: `(at, mbps)` events applied in order.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    events: Vec<(Duration, f64)>,
+    next: usize,
+}
+
+impl Schedule {
+    pub fn new(mut events: Vec<(Duration, f64)>) -> Self {
+        events.sort_by_key(|e| e.0);
+        Schedule { events, next: 0 }
+    }
+
+    /// The paper's experiment trace: toggle 20 <-> 5 Mbps every `period`.
+    pub fn toggle(high: f64, low: f64, period: Duration, cycles: usize) -> Self {
+        let mut ev = Vec::new();
+        for i in 1..=cycles {
+            ev.push((period * i as u32, if i % 2 == 1 { low } else { high }));
+        }
+        Schedule::new(ev)
+    }
+
+    /// Pop all events due at or before `now`; returns the latest one.
+    pub fn poll(&mut self, now: Duration) -> Option<f64> {
+        let mut last = None;
+        while self.next < self.events.len() && self.events[self.next].0 <= now {
+            last = Some(self.events[self.next].1);
+            self.next += 1;
+        }
+        last
+    }
+
+    pub fn peek_next(&self) -> Option<(Duration, f64)> {
+        self.events.get(self.next).copied()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next >= self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_link(mbps: f64) -> Link {
+        Link::new(Clock::simulated(), mbps, Duration::from_millis(20))
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        // 20 Mbps, 1 MB payload: 20ms + 8e6/20e6 s = 20ms + 400ms.
+        let t = transfer_time(1_000_000, 20.0, Duration::from_millis(20));
+        assert!((t.as_secs_f64() - 0.42).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slower_link_is_slower() {
+        let l = sim_link(20.0);
+        let fast = l.transfer_time(500_000);
+        l.set_bandwidth(5.0);
+        let slow = l.transfer_time(500_000);
+        assert!(slow > fast * 3); // 4x serialisation, same latency
+    }
+
+    #[test]
+    fn transfer_advances_clock() {
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 20.0, Duration::from_millis(20));
+        let t0 = clock.now();
+        let d = l.transfer(1_000_000);
+        assert!(clock.now() - t0 >= d);
+        assert_eq!(l.bytes_sent(), 1_000_000);
+        assert_eq!(l.transfers(), 1);
+    }
+
+    #[test]
+    fn fifo_contention_accumulates() {
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 8.0, Duration::ZERO);
+        // 1 MB at 8 Mbps = 1 s each; three sequential transfers queue.
+        l.transfer(1_000_000);
+        l.transfer(1_000_000);
+        l.transfer(1_000_000);
+        assert!(clock.now() >= Duration::from_secs(3));
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let l = sim_link(20.0);
+        assert_eq!(l.transfer_time(0), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn schedule_polls_in_order() {
+        let mut s = Schedule::new(vec![
+            (Duration::from_secs(2), 5.0),
+            (Duration::from_secs(1), 10.0),
+        ]);
+        assert_eq!(s.poll(Duration::from_millis(500)), None);
+        assert_eq!(s.poll(Duration::from_secs(1)), Some(10.0));
+        assert_eq!(s.poll(Duration::from_secs(5)), Some(5.0));
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn schedule_poll_skips_to_latest() {
+        let mut s = Schedule::new(vec![
+            (Duration::from_secs(1), 10.0),
+            (Duration::from_secs(2), 5.0),
+        ]);
+        // Both events due: the latest wins.
+        assert_eq!(s.poll(Duration::from_secs(3)), Some(5.0));
+    }
+
+    #[test]
+    fn toggle_alternates() {
+        let s = Schedule::toggle(20.0, 5.0, Duration::from_secs(10), 4);
+        let bws: Vec<f64> = s.events.iter().map(|e| e.1).collect();
+        assert_eq!(bws, vec![5.0, 20.0, 5.0, 20.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_bandwidth() {
+        sim_link(0.0);
+    }
+}

@@ -1,0 +1,347 @@
+//! Runtime bridge: loads the AOT HLO artifacts and executes them on the
+//! PJRT CPU client from the Rust hot path (Python never runs at request
+//! time).
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//! HLO *text* is the interchange format (jax >= 0.5 protos are rejected by
+//! the bundled xla_extension 0.5.1).
+
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::clock::Clock;
+use crate::models::{LayerManifest, ModelManifest};
+pub use weights::WeightStore;
+
+/// An execution domain — the "edge server" or the "cloud server".
+///
+/// Each domain owns a PJRT CPU client (its "machine"). `cpu_scale` models
+/// relative compute speed and CPU availability: measured execution time is
+/// dilated by `1/cpu_scale` on the experiment clock (the stress-ng analogue;
+/// DESIGN.md §Substitutions).
+pub struct Domain {
+    pub name: String,
+    client: PjRtClient,
+    /// Relative CPU speed (1.0 = this host's full speed), stored as f64
+    /// bits so the stress controller can adjust it at runtime. The paper's
+    /// cloud (8 cores) vs edge (4 cores) is modelled as cloud 2.0 vs edge
+    /// 1.0; stress-ng CPU availability multiplies on top.
+    cpu_scale_bits: std::sync::atomic::AtomicU64,
+    /// Compiled-executable cache keyed by HLO path. Per-layer artifacts
+    /// mean a *repartition* never introduces a new module on a domain that
+    /// has already run that layer — Dynamic Switching exploits this (the
+    /// proactive design of SIII-B); the naive Pause-and-Resume baseline
+    /// reloads everything uncached, like the Keras app in the paper.
+    exe_cache: Mutex<HashMap<PathBuf, Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Domain {
+    pub fn new(name: impl Into<String>, cpu_scale: f64) -> Result<Arc<Self>> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Arc::new(Domain {
+            name: name.into(),
+            client,
+            cpu_scale_bits: std::sync::atomic::AtomicU64::new(cpu_scale.to_bits()),
+            exe_cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn cpu_scale(&self) -> f64 {
+        f64::from_bits(self.cpu_scale_bits.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    /// Adjust the effective CPU speed (stress-ng analogue).
+    pub fn set_cpu_scale(&self, scale: f64) {
+        assert!(scale > 0.0, "cpu scale must be positive");
+        self.cpu_scale_bits
+            .store(scale.to_bits(), std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Load + compile an HLO module, with optional caching.
+    pub fn compile_hlo(&self, path: &Path, use_cache: bool) -> Result<Arc<PjRtLoadedExecutable>> {
+        if use_cache {
+            if let Some(exe) = self.exe_cache.lock().unwrap().get(path) {
+                return Ok(exe.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?,
+        );
+        if use_cache {
+            self.exe_cache
+                .lock()
+                .unwrap()
+                .insert(path.to_path_buf(), exe.clone());
+        }
+        Ok(exe)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.exe_cache.lock().unwrap().len()
+    }
+
+    pub fn clear_cache(&self) {
+        self.exe_cache.lock().unwrap().clear();
+    }
+}
+
+/// f32 literal from a host slice (frame upload helper).
+pub fn literal_from_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let expected: usize = shape.iter().product();
+    if expected != data.len() {
+        anyhow::bail!("literal shape {shape:?} needs {expected} floats, got {}", data.len());
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("creating literal: {e:?}"))
+}
+
+/// Cost breakdown of building a chain (the "model load" part of pipeline
+/// initialisation the paper's downtime windows contain).
+#[derive(Debug, Clone, Default)]
+pub struct BuildStats {
+    pub compile: Duration,
+    pub weights_upload: Duration,
+    pub num_layers: usize,
+}
+
+/// One compiled partition unit, ready to execute.
+///
+/// Parameters are staged as device buffers once at build time; per-frame
+/// execution chains device buffers between layers and reads back to the
+/// host only at the chain boundary (EXPERIMENTS.md §Perf).
+pub struct LayerExec {
+    pub manifest: LayerManifest,
+    exe: Arc<PjRtLoadedExecutable>,
+    param_bufs: Vec<PjRtBuffer>,
+}
+
+impl LayerExec {
+    /// Execute on a device buffer, returning the output device buffer
+    /// (no host readback) — the hot-path form.
+    pub fn run_buf(&self, input: &PjRtBuffer) -> Result<PjRtBuffer> {
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(1 + self.param_bufs.len());
+        args.push(input);
+        args.extend(self.param_bufs.iter());
+        let mut out = self
+            .exe
+            .execute_b::<&PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.manifest.name))?;
+        Ok(out.remove(0).remove(0))
+    }
+
+    /// Literal-in/literal-out execution with a full host round trip — used
+    /// by the per-layer profiler where each layer is timed in isolation.
+    pub fn run(&self, input: &Literal) -> Result<Literal> {
+        let client = self.exe.client();
+        let in_buf = client
+            .buffer_from_host_literal(None, input)
+            .map_err(|e| anyhow!("upload {}: {e:?}", self.manifest.name))?;
+        let out = self.run_buf(&in_buf)?;
+        out.to_literal_sync()
+            .map_err(|e| anyhow!("readback {}: {e:?}", self.manifest.name))
+    }
+}
+
+/// Per-run timing of a chain execution.
+#[derive(Debug, Clone, Default)]
+pub struct ChainTiming {
+    /// Total execution time on the experiment clock (dilated by cpu_scale).
+    pub total: Duration,
+    /// Per-layer dilated times, aligned with the chain's layer range.
+    pub per_layer: Vec<Duration>,
+}
+
+/// A compiled chain of consecutive partition units on one domain — one side
+/// (edge or cloud) of an edge-cloud pipeline.
+pub struct ChainExecutor {
+    pub domain: Arc<Domain>,
+    pub range: std::ops::Range<usize>,
+    layers: Vec<LayerExec>,
+    pub build_stats: BuildStats,
+}
+
+impl ChainExecutor {
+    /// Compile units `range` of `manifest` on `domain` and stage their
+    /// weights. This is real measured work — the heart of every pipeline
+    /// initialisation cost in the paper's downtime equations.
+    pub fn build(
+        domain: Arc<Domain>,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+    ) -> Result<Self> {
+        Self::build_opts(domain, manifest, range, weights, true)
+    }
+
+    /// [`Self::build`] without the executable cache — models a naive
+    /// application that reloads the model from scratch (the Pause-and-
+    /// Resume baseline).
+    pub fn build_uncached(
+        domain: Arc<Domain>,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+    ) -> Result<Self> {
+        Self::build_opts(domain, manifest, range, weights, false)
+    }
+
+    pub fn build_opts(
+        domain: Arc<Domain>,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+        use_cache: bool,
+    ) -> Result<Self> {
+        anyhow::ensure!(range.end <= manifest.num_layers(), "range out of bounds");
+        let mut layers = Vec::with_capacity(range.len());
+        let mut compile = Duration::ZERO;
+        let mut upload = Duration::ZERO;
+        for i in range.clone() {
+            let lm = &manifest.layers[i];
+            let t0 = Instant::now();
+            let exe = domain.compile_hlo(&manifest.hlo_path(i), use_cache)?;
+            compile += t0.elapsed();
+
+            let t1 = Instant::now();
+            let param_bufs = weights
+                .layer_buffers(domain.client(), lm)
+                .with_context(|| format!("weights for {}", lm.name))?;
+            upload += t1.elapsed();
+
+            layers.push(LayerExec { manifest: lm.clone(), exe, param_bufs });
+        }
+        Ok(ChainExecutor {
+            domain,
+            range: range.clone(),
+            build_stats: BuildStats {
+                compile,
+                weights_upload: upload,
+                num_layers: range.len(),
+            },
+            layers,
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Execute the chain, chaining device buffers between layers (one
+    /// upload, one readback). Real wall time is measured end-to-end; the
+    /// difference implied by `cpu_scale` is injected on `clock` so stressed
+    /// or slower domains take proportionally longer on the timeline.
+    pub fn run(&self, input: &Literal, clock: &Clock) -> Result<(Literal, ChainTiming)> {
+        let t0 = Instant::now();
+        let out = self.run_raw(input)?;
+        let real = t0.elapsed();
+        let scale = self.domain.cpu_scale().max(1e-3);
+        let dilated = real.mul_f64(1.0 / scale);
+        if dilated > real {
+            clock.advance(dilated - real);
+        }
+        Ok((out, ChainTiming { total: dilated, per_layer: Vec::new() }))
+    }
+
+    /// Execute without timing dilation (profiling / warmup).
+    pub fn run_raw(&self, input: &Literal) -> Result<Literal> {
+        if self.layers.is_empty() {
+            return Ok(clone_literal(input));
+        }
+        let client = self.domain.client();
+        let mut buf = client
+            .buffer_from_host_literal(None, input)
+            .map_err(|e| anyhow!("chain input upload: {e:?}"))?;
+        for layer in &self.layers {
+            buf = layer.run_buf(&buf)?;
+        }
+        buf.to_literal_sync()
+            .map_err(|e| anyhow!("chain readback: {e:?}"))
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerExec {
+        &self.layers[i]
+    }
+}
+
+/// Build a single-module executor for a fused partition artifact
+/// (ablation counterpart of the per-layer chain; see
+/// rust/benches/ablation_fused.rs). `side` selects edge (units [0, split))
+/// or cloud (units [split, N)); parameters are the concatenation of the
+/// covered units' parameters in declaration order.
+pub fn build_fused_exec(
+    domain: Arc<Domain>,
+    manifest: &ModelManifest,
+    entry: &crate::models::FusedEntry,
+    edge_side: bool,
+    weights: &WeightStore,
+) -> Result<LayerExec> {
+    let hlo = if edge_side { &entry.edge_hlo } else { &entry.cloud_hlo };
+    let hlo = hlo
+        .as_ref()
+        .ok_or_else(|| anyhow!("fused entry at split {} has no such side", entry.split))?;
+    let range = if edge_side {
+        0..entry.split
+    } else {
+        entry.split..manifest.num_layers()
+    };
+    let exe = domain.compile_hlo(&manifest.dir.join(hlo), true)?;
+    let mut param_bufs = Vec::new();
+    for i in range.clone() {
+        param_bufs.extend(weights.layer_buffers(domain.client(), &manifest.layers[i])?);
+    }
+    let last = range.end.max(1) - 1;
+    let first = range.start;
+    Ok(LayerExec {
+        manifest: LayerManifest {
+            index: usize::MAX,
+            name: format!("fused[{first}..{})", range.end),
+            kind: "fused".into(),
+            hlo: hlo.clone(),
+            input_shape: if first == 0 {
+                manifest.input_shape.clone()
+            } else {
+                manifest.layers[first].input_shape.clone()
+            },
+            output_shape: manifest.layers[last].output_shape.clone(),
+            output_bytes: manifest.layers[last].output_bytes,
+            flops: manifest.layers[range].iter().map(|l| l.flops).sum(),
+            params: vec![],
+        },
+        exe,
+        param_bufs,
+    })
+}
+
+/// Literal has no Clone in the xla crate; round-trip through raw f32.
+pub fn clone_literal(l: &Literal) -> Literal {
+    let shape = l
+        .array_shape()
+        .expect("clone_literal: non-array literal");
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().expect("clone_literal: non-f32 literal");
+    literal_from_f32(&dims, &data).expect("clone_literal: rebuild")
+}

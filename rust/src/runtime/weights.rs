@@ -1,0 +1,168 @@
+//! Weight store: loads `weights.bin` and materialises per-layer parameter
+//! literals for the PJRT executables.
+//!
+//! Weights are runtime inputs (not HLO constants) — uploading them is part
+//! of the pipeline-initialisation cost the paper measures as part of
+//! container/model startup, and it keeps the HLO text artifacts small.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient};
+
+use crate::models::{LayerManifest, ModelManifest};
+
+/// The raw weight blob, shared between pipelines (read-only).
+#[derive(Clone)]
+pub struct WeightStore {
+    blob: Arc<Vec<u8>>,
+}
+
+impl WeightStore {
+    /// Read `<model dir>/weights.bin` and validate its size.
+    pub fn load(manifest: &ModelManifest) -> Result<Self> {
+        let path = manifest.weights_path();
+        let blob = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if blob.len() != manifest.weights_bytes {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                manifest.weights_bytes
+            );
+        }
+        Ok(WeightStore { blob: Arc::new(blob) })
+    }
+
+    /// In-memory store (tests).
+    pub fn from_bytes(blob: Vec<u8>) -> Self {
+        WeightStore { blob: Arc::new(blob) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blob.is_empty()
+    }
+
+    /// Raw f32 slice for one parameter (zero-copy view of the blob).
+    pub fn param_bytes(&self, p: &crate::models::ParamEntry) -> Result<&[u8]> {
+        let end = p.offset_bytes + p.size_bytes;
+        if end > self.blob.len() {
+            bail!("param {} [{}..{end}) outside weights.bin", p.name, p.offset_bytes);
+        }
+        Ok(&self.blob[p.offset_bytes..end])
+    }
+
+    /// Stage one layer's parameters as device buffers, in declaration
+    /// order — exactly the positional arguments `unit(x, *params)` expects
+    /// after x. This is the real "model load" data movement.
+    pub fn layer_buffers(
+        &self,
+        client: &PjRtClient,
+        layer: &LayerManifest,
+    ) -> Result<Vec<PjRtBuffer>> {
+        layer
+            .params
+            .iter()
+            .map(|p| {
+                let bytes = self.param_bytes(p)?;
+                // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes
+                // its ElementType discriminant where PJRT expects a
+                // PrimitiveType, corrupting the dtype. Decode to f32 (also
+                // fixes the blob's 1-byte alignment) and use the typed API.
+                let floats: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                client
+                    .buffer_from_host_buffer::<f32>(&floats, &p.shape, None)
+                    .map_err(|e| anyhow::anyhow!("buffer for {}: {e:?}", p.name))
+            })
+            .collect()
+    }
+
+    /// Build the parameter literals for one layer (host-side view; used by
+    /// tests and tooling).
+    pub fn layer_literals(&self, layer: &LayerManifest) -> Result<Vec<Literal>> {
+        layer
+            .params
+            .iter()
+            .map(|p| {
+                let bytes = self.param_bytes(p)?;
+                let expected: usize = p.shape.iter().product::<usize>() * 4;
+                if bytes.len() != expected {
+                    bail!(
+                        "param {}: {} bytes but shape {:?} needs {expected}",
+                        p.name,
+                        bytes.len(),
+                        p.shape
+                    );
+                }
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &p.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow::anyhow!("literal for {}: {e:?}", p.name))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ParamEntry;
+
+    fn entry(offset: usize, shape: &[usize]) -> ParamEntry {
+        ParamEntry {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            offset_bytes: offset,
+            size_bytes: shape.iter().product::<usize>() * 4,
+        }
+    }
+
+    #[test]
+    fn slices_params() {
+        let data: Vec<u8> = (0..32).collect();
+        let ws = WeightStore::from_bytes(data);
+        let p = entry(4, &[2, 3]);
+        let got = ws.param_bytes(&p).unwrap();
+        assert_eq!(got.len(), 24);
+        assert_eq!(got[0], 4);
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let ws = WeightStore::from_bytes(vec![0; 8]);
+        assert!(ws.param_bytes(&entry(4, &[2])).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0, 7.0, -8.5];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let ws = WeightStore::from_bytes(bytes);
+        let layer = LayerManifest {
+            index: 0,
+            name: "l".into(),
+            kind: "conv".into(),
+            hlo: "x".into(),
+            input_shape: vec![1],
+            output_shape: vec![1],
+            output_bytes: 4,
+            flops: 0,
+            params: vec![entry(0, &[2, 3])],
+        };
+        let lits = ws.layer_literals(&layer).unwrap();
+        assert_eq!(lits.len(), 1);
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vals);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrate utilities: JSON parsing, deterministic PRNG, summary
+//! statistics. The build environment is offline, so these replace
+//! `serde_json`, `rand`, and the statistics half of `criterion`.
+
+pub mod json;
+pub mod prng;
+pub mod stats;

@@ -1,0 +1,109 @@
+//! Failure injection: corrupted or missing artifacts must fail loudly and
+//! precisely, never crash or silently mis-serve.
+
+use std::fs;
+
+use neukonfig::models::{default_artifacts_dir, ArtifactIndex, ModelManifest};
+use neukonfig::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
+
+fn with_artifact_copy(model: &str, f: impl FnOnce(&std::path::Path)) {
+    let Ok(index) = ArtifactIndex::load(default_artifacts_dir()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let src = index.root.join(model);
+    let dst = std::env::temp_dir().join(format!("nk-fault-{}-{}", model, std::process::id()));
+    let _ = fs::remove_dir_all(&dst);
+    fs::create_dir_all(&dst).unwrap();
+    for entry in fs::read_dir(&src).unwrap() {
+        let e = entry.unwrap();
+        fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+    f(&dst);
+    let _ = fs::remove_dir_all(&dst);
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    with_artifact_copy("mobilenetv2", |dir| {
+        let wpath = dir.join("weights.bin");
+        let blob = fs::read(&wpath).unwrap();
+        fs::write(&wpath, &blob[..blob.len() / 2]).unwrap();
+        let manifest = ModelManifest::load(dir).unwrap();
+        let err = match WeightStore::load(&manifest) {
+            Err(e) => e,
+            Ok(_) => panic!("truncated weights accepted"),
+        };
+        assert!(err.to_string().contains("bytes"), "got: {err}");
+    });
+}
+
+#[test]
+fn corrupt_hlo_fails_at_compile_not_at_run() {
+    with_artifact_copy("mobilenetv2", |dir| {
+        fs::write(dir.join("layer_00.hlo.txt"), "HloModule garbage\nnot hlo").unwrap();
+        let manifest = ModelManifest::load(dir).unwrap();
+        let weights = WeightStore::load(&manifest).unwrap();
+        let domain = Domain::new("t", 1.0).unwrap();
+        let err = match ChainExecutor::build(domain, &manifest, 0..1, &weights) {
+            Err(e) => e,
+            Ok(_) => panic!("corrupt HLO accepted"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("layer_00"), "error should name the artifact: {msg}");
+    });
+}
+
+#[test]
+fn missing_hlo_file_is_reported() {
+    with_artifact_copy("mobilenetv2", |dir| {
+        fs::remove_file(dir.join("layer_01.hlo.txt")).unwrap();
+        let manifest = ModelManifest::load(dir).unwrap();
+        let weights = WeightStore::load(&manifest).unwrap();
+        let domain = Domain::new("t", 1.0).unwrap();
+        // Layer 0 still builds.
+        assert!(ChainExecutor::build(domain.clone(), &manifest, 0..1, &weights).is_ok());
+        // Layer 1 does not.
+        assert!(ChainExecutor::build(domain, &manifest, 1..2, &weights).is_err());
+    });
+}
+
+#[test]
+fn manifest_with_broken_shapes_rejected() {
+    with_artifact_copy("mobilenetv2", |dir| {
+        let mpath = dir.join("manifest.json");
+        let text = fs::read_to_string(&mpath).unwrap();
+        // Break the chaining: first layer's output shape tampered.
+        let broken = text.replacen("\"output_shape\": [", "\"output_shape\": [77, ", 1);
+        fs::write(&mpath, broken).unwrap();
+        assert!(ModelManifest::load(dir).is_err());
+    });
+}
+
+#[test]
+fn wrong_input_shape_rejected_at_execute() {
+    let Ok(index) = ArtifactIndex::load(default_artifacts_dir()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = index.model("mobilenetv2").unwrap();
+    let weights = WeightStore::load(&manifest).unwrap();
+    let domain = Domain::new("t", 1.0).unwrap();
+    let chain = ChainExecutor::build(domain, &manifest, 0..1, &weights).unwrap();
+    // 8x8 frame against a 64x64 executable.
+    let bad = literal_from_f32(&[1, 8, 8, 3], &vec![0.0; 192]).unwrap();
+    assert!(chain.run_raw(&bad).is_err());
+}
+
+#[test]
+fn literal_shape_mismatch_rejected() {
+    assert!(literal_from_f32(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+}
+
+#[test]
+fn garbage_manifest_json_rejected() {
+    with_artifact_copy("mobilenetv2", |dir| {
+        fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(ModelManifest::load(dir).is_err());
+    });
+}

@@ -1,0 +1,191 @@
+//! Integration: load real AOT artifacts, execute them via PJRT, and verify
+//! the numbers against the JAX golden outputs. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use neukonfig::clock::Clock;
+use neukonfig::models::{default_artifacts_dir, ArtifactIndex};
+use neukonfig::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
+use neukonfig::util::json;
+
+fn artifacts() -> Option<ArtifactIndex> {
+    ArtifactIndex::load(default_artifacts_dir()).ok()
+}
+
+fn golden(model_dir: &std::path::Path) -> json::Value {
+    let text = std::fs::read_to_string(model_dir.join("golden.json")).expect("golden.json");
+    json::parse(&text).expect("parse golden")
+}
+
+/// Full-chain execution on one domain must reproduce the JAX forward pass.
+#[test]
+fn full_chain_matches_jax_golden() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for model_name in ["vgg19", "mobilenetv2"] {
+        let manifest = index.model(model_name).unwrap();
+        let weights = WeightStore::load(&manifest).unwrap();
+        let domain = Domain::new("test", 1.0).unwrap();
+        let chain = ChainExecutor::build(
+            domain,
+            &manifest,
+            0..manifest.num_layers(),
+            &weights,
+        )
+        .unwrap();
+
+        let g = golden(&manifest.dir);
+        let input_value = g.get("input_value").as_f64().unwrap() as f32;
+        let numel: usize = manifest.input_shape.iter().product();
+        let input = literal_from_f32(&manifest.input_shape, &vec![input_value; numel]).unwrap();
+
+        let out = chain.run_raw(&input).unwrap();
+        let values = out.to_vec::<f32>().unwrap();
+
+        let want_shape: Vec<usize> = g
+            .get("output_shape")
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(values.len(), want_shape.iter().product::<usize>());
+
+        let want_sum = g.get("output_sum").as_f64().unwrap();
+        let got_sum: f64 = values.iter().map(|&v| v as f64).sum();
+        assert!(
+            (got_sum - want_sum).abs() < 1e-3,
+            "{model_name}: sum {got_sum} != golden {want_sum}"
+        );
+
+        for (i, want) in g.get("output_first8").as_array().unwrap().iter().enumerate() {
+            let want = want.as_f64().unwrap();
+            let got = values[i] as f64;
+            assert!(
+                (got - want).abs() < 1e-4 + want.abs() * 1e-3,
+                "{model_name}[{i}]: {got} != {want}"
+            );
+        }
+        println!("{model_name}: golden match (sum={got_sum:.6})");
+    }
+}
+
+/// Splitting the chain at any point and running edge-then-cloud must give
+/// the same output as the unsplit chain — the invariant that makes
+/// repartitioning semantically free.
+#[test]
+fn partitioned_execution_equals_full() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = index.model("vgg19").unwrap();
+    let weights = WeightStore::load(&manifest).unwrap();
+    let edge = Domain::new("edge", 1.0).unwrap();
+    let cloud = Domain::new("cloud", 2.0).unwrap();
+    let n = manifest.num_layers();
+
+    let full = ChainExecutor::build(edge.clone(), &manifest, 0..n, &weights).unwrap();
+    let numel: usize = manifest.input_shape.iter().product();
+    let input = literal_from_f32(&manifest.input_shape, &vec![0.25f32; numel]).unwrap();
+    let want = full.run_raw(&input).unwrap().to_vec::<f32>().unwrap();
+
+    for split in [1, n / 2, n - 1] {
+        let e = ChainExecutor::build(edge.clone(), &manifest, 0..split, &weights).unwrap();
+        let c = ChainExecutor::build(cloud.clone(), &manifest, split..n, &weights).unwrap();
+        let mid = e.run_raw(&input).unwrap();
+        let got = c.run_raw(&mid).unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-5 + w.abs() * 1e-4,
+                "split {split} idx {i}: {g} != {w}"
+            );
+        }
+    }
+}
+
+/// cpu_scale dilation lands on the clock, not on wall time.
+#[test]
+fn cpu_scale_dilates_timeline() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = index.model("mobilenetv2").unwrap();
+    let weights = WeightStore::load(&manifest).unwrap();
+    let domain = Domain::new("edge", 1.0).unwrap();
+    let chain = ChainExecutor::build(domain.clone(), &manifest, 0..3, &weights).unwrap();
+    let numel: usize = manifest.input_shape.iter().product();
+    let input = literal_from_f32(&manifest.input_shape, &vec![0.5f32; numel]).unwrap();
+
+    let clock = Clock::simulated();
+    // Warm up (first execution includes one-time allocation effects), then
+    // take the best of several runs in each mode to suppress wall noise.
+    for _ in 0..3 {
+        chain.run_raw(&input).unwrap();
+    }
+    let best = |runs: usize, clock: &Clock| {
+        (0..runs)
+            .map(|_| chain.run(&input, clock).unwrap().1.total)
+            .min()
+            .unwrap()
+    };
+    let t_full = best(5, &clock);
+    domain.set_cpu_scale(0.25);
+    let t_stressed = best(5, &clock);
+    // 4x dilation (with generous tolerance for wall-time noise).
+    assert!(
+        t_stressed > t_full.mul_f64(2.0),
+        "stressed {t_stressed:?} !>> unstressed {t_full:?}"
+    );
+    assert!(clock.simulated_component() > std::time::Duration::ZERO);
+}
+
+/// Weight store slices must match the manifest offsets exactly.
+#[test]
+fn weights_cover_manifest() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for model_name in ["vgg19", "mobilenetv2"] {
+        let manifest = index.model(model_name).unwrap();
+        let weights = WeightStore::load(&manifest).unwrap();
+        assert_eq!(weights.len(), manifest.weights_bytes);
+        let mut offset = 0usize;
+        for layer in &manifest.layers {
+            for p in &layer.params {
+                assert_eq!(p.offset_bytes, offset, "{model_name}/{}", p.name);
+                offset += p.size_bytes;
+                let lits = weights.layer_literals(layer).unwrap();
+                assert_eq!(lits.len(), layer.params.len());
+            }
+        }
+        assert_eq!(offset, manifest.weights_bytes);
+    }
+}
+
+/// Two domains ("edge" and "cloud") can coexist in one process, each with
+/// its own PJRT client and executables.
+#[test]
+fn two_domains_coexist() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = index.model("mobilenetv2").unwrap();
+    let weights = WeightStore::load(&manifest).unwrap();
+    let edge = Domain::new("edge", 1.0).unwrap();
+    let cloud = Domain::new("cloud", 2.0).unwrap();
+    let a = ChainExecutor::build(edge, &manifest, 0..2, &weights).unwrap();
+    let b = ChainExecutor::build(cloud, &manifest, 0..2, &weights).unwrap();
+    let numel: usize = manifest.input_shape.iter().product();
+    let input = literal_from_f32(&manifest.input_shape, &vec![0.1f32; numel]).unwrap();
+    let va = a.run_raw(&input).unwrap().to_vec::<f32>().unwrap();
+    let vb = b.run_raw(&input).unwrap().to_vec::<f32>().unwrap();
+    assert_eq!(va, vb);
+    let _ = Arc::new(());
+}

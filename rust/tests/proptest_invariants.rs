@@ -1,0 +1,303 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state, accounting). `proptest` is unavailable offline, so cases are
+//! generated with the in-tree deterministic PRNG; every failure message
+//! includes the case seed for reproduction.
+
+use std::time::Duration;
+
+use neukonfig::container::MemoryLedger;
+use neukonfig::coordinator::batcher::{Batcher, Offer};
+use neukonfig::coordinator::flow::simulate_window;
+use neukonfig::coordinator::state::PipelineState;
+use neukonfig::netsim::{transfer_time, Schedule};
+use neukonfig::profiler::{LayerProfile, ModelProfile};
+use neukonfig::util::json;
+use neukonfig::util::prng::Prng;
+use neukonfig::util::stats::{percentile_sorted, Summary, Welford};
+
+const CASES: usize = 200;
+
+/// Random profile generator: 1..30 layers with arbitrary times/sizes.
+fn random_profile(rng: &mut Prng) -> ModelProfile {
+    let n = 1 + rng.next_below(30);
+    let layers = (0..n)
+        .map(|i| LayerProfile {
+            index: i,
+            name: format!("l{i}"),
+            kind: "conv".into(),
+            edge_time: Duration::from_micros(rng.next_range(10, 50_000)),
+            cloud_time: Duration::from_micros(rng.next_range(10, 50_000)),
+            output_bytes: rng.next_range(16, 4_000_000) as usize,
+        })
+        .collect();
+    ModelProfile {
+        model: "rand".into(),
+        input_bytes: rng.next_range(16, 4_000_000) as usize,
+        layers,
+    }
+}
+
+#[test]
+fn prop_optimal_split_is_argmin() {
+    let mut rng = Prng::new(0xA11CE);
+    for case in 0..CASES {
+        let p = random_profile(&mut rng);
+        let bw = rng.next_f32_range(0.5, 100.0) as f64;
+        let lat = Duration::from_millis(rng.next_range(0, 100));
+        let cpu = rng.next_f32_range(0.05, 1.0) as f64;
+        let opt = p.optimal_split(bw, lat, cpu);
+        let best = p.breakdown(opt, bw, lat, cpu).total();
+        for k in 0..=p.layers.len() {
+            assert!(
+                best <= p.breakdown(k, bw, lat, cpu).total(),
+                "case {case}: split {opt} not optimal vs {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_breakdown_monotone_in_bandwidth() {
+    // More bandwidth never increases any split's total latency.
+    let mut rng = Prng::new(0xBEEF);
+    for case in 0..CASES {
+        let p = random_profile(&mut rng);
+        let lat = Duration::from_millis(rng.next_range(0, 50));
+        let bw_lo = rng.next_f32_range(0.5, 20.0) as f64;
+        let bw_hi = bw_lo * (1.0 + rng.next_f64() * 10.0);
+        for k in 0..=p.layers.len() {
+            let slow = p.breakdown(k, bw_lo, lat, 1.0).total();
+            let fast = p.breakdown(k, bw_hi, lat, 1.0).total();
+            assert!(fast <= slow, "case {case}: split {k} got faster on less bandwidth");
+        }
+    }
+}
+
+#[test]
+fn prop_transfer_time_monotone() {
+    let mut rng = Prng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let lat = Duration::from_millis(rng.next_range(0, 100));
+        let bw = rng.next_f32_range(0.1, 1000.0) as f64;
+        let a = rng.next_range(0, 10_000_000) as usize;
+        let b = a + rng.next_range(1, 1_000_000) as usize;
+        assert!(
+            transfer_time(a, bw, lat) <= transfer_time(b, bw, lat),
+            "case {case}: more bytes took less time"
+        );
+        let bw2 = bw * 2.0;
+        assert!(
+            transfer_time(b, bw2, lat) <= transfer_time(b, bw, lat),
+            "case {case}: more bandwidth took more time"
+        );
+    }
+}
+
+#[test]
+fn prop_flow_conservation_and_bounds() {
+    let mut rng = Prng::new(0xF00D);
+    for case in 0..CASES {
+        let window = Duration::from_millis(rng.next_range(0, 20_000));
+        let fps = rng.next_f32_range(0.5, 60.0) as f64;
+        let service = if rng.chance(0.3) {
+            None
+        } else {
+            Some(Duration::from_millis(rng.next_range(1, 2_000)))
+        };
+        let cap = 1 + rng.next_below(32);
+        let o = simulate_window(window, fps, service, cap);
+        assert_eq!(
+            o.arrivals,
+            o.served + o.queued + o.dropped,
+            "case {case}: conservation violated"
+        );
+        assert!(o.queued <= cap as u64, "case {case}: queue exceeded capacity");
+        if service.is_none() {
+            assert_eq!(o.served, 0, "case {case}: served without a server");
+        }
+        let dr = o.drop_rate();
+        assert!((0.0..=1.0).contains(&dr), "case {case}: drop rate {dr}");
+    }
+}
+
+#[test]
+fn prop_flow_drops_monotone_in_fps() {
+    // Within one service/window config, higher fps never reduces the
+    // number of dropped frames (Figs 14/15 trend).
+    let mut rng = Prng::new(0x5EED);
+    for case in 0..CASES {
+        let window = Duration::from_millis(rng.next_range(100, 10_000));
+        let service = Some(Duration::from_millis(rng.next_range(10, 1_000)));
+        let cap = 1 + rng.next_below(16);
+        let f1 = rng.next_f32_range(1.0, 30.0) as f64;
+        let f2 = f1 * (1.0 + rng.next_f64());
+        let d1 = simulate_window(window, f1, service, cap).dropped;
+        let d2 = simulate_window(window, f2, service, cap).dropped;
+        assert!(d2 + 1 >= d1, "case {case}: fps {f1}->{f2} drops {d1}->{d2}");
+    }
+}
+
+#[test]
+fn prop_ledger_never_exceeds_total() {
+    let mut rng = Prng::new(0x1ED6E4);
+    for case in 0..CASES {
+        let total = rng.next_f32_range(100.0, 10_000.0) as f64;
+        let ledger = MemoryLedger::new(total);
+        let mut live = Vec::new();
+        for _ in 0..rng.next_range(1, 40) {
+            if rng.chance(0.6) {
+                let mb = rng.next_f32_range(1.0, 2_000.0) as f64;
+                if let Ok(r) = ledger.reserve("x", mb) {
+                    live.push(r);
+                }
+            } else if !live.is_empty() {
+                live.swap_remove(rng.next_below(live.len()));
+            }
+            let in_use = ledger.in_use_mb();
+            assert!(
+                in_use <= total + 1e-6,
+                "case {case}: {in_use} > total {total}"
+            );
+            let sum: f64 = live.iter().map(|r| r.mb).sum();
+            assert!(
+                (in_use - sum).abs() < 1e-6,
+                "case {case}: ledger {in_use} != live sum {sum}"
+            );
+            assert!(ledger.peak_mb() + 1e-9 >= in_use, "case {case}: peak < in_use");
+        }
+    }
+}
+
+#[test]
+fn prop_state_machine_no_resurrection() {
+    // Whatever transition sequence is attempted, once Terminated a
+    // pipeline state can never legally change again.
+    use PipelineState::*;
+    let all = [Initialising, Standby, Active, Paused, Draining, Terminated];
+    let mut rng = Prng::new(0xDEAD);
+    for case in 0..CASES {
+        let mut s = Initialising;
+        for _ in 0..50 {
+            let next = all[rng.next_below(all.len())];
+            if s.can_transition(next) {
+                s = next;
+            }
+            if s == Terminated {
+                for &t in &all {
+                    assert!(
+                        !s.can_transition(t),
+                        "case {case}: resurrected to {t:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_frames() {
+    let mut rng = Prng::new(0xBA7C4);
+    for case in 0..CASES {
+        let cap = 1 + rng.next_below(16);
+        let dmax = 1 + rng.next_below(8);
+        let b = Batcher::new(cap, dmax);
+        let mut offered = 0u64;
+        let mut accepted = 0u64;
+        let mut drained = 0u64;
+        for _ in 0..rng.next_range(1, 100) {
+            if rng.chance(0.6) {
+                offered += 1;
+                let f = neukonfig::device::Frame {
+                    id: offered,
+                    captured_at: Duration::ZERO,
+                    pixels: vec![],
+                    shape: vec![1, 1, 1, 0],
+                };
+                if b.offer(f) == Offer::Accepted {
+                    accepted += 1;
+                }
+            } else {
+                drained += b.drain().len() as u64;
+            }
+            assert!(b.len() <= cap, "case {case}: queue over capacity");
+            assert_eq!(
+                accepted,
+                drained + b.len() as u64,
+                "case {case}: frames lost or duplicated"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_poll_consumes_in_order() {
+    let mut rng = Prng::new(0x5CED);
+    for case in 0..CASES {
+        let n = rng.next_range(1, 20);
+        let events: Vec<(Duration, f64)> = (0..n)
+            .map(|_| {
+                (
+                    Duration::from_millis(rng.next_range(0, 10_000)),
+                    rng.next_f32_range(1.0, 100.0) as f64,
+                )
+            })
+            .collect();
+        let mut sorted = events.clone();
+        sorted.sort_by_key(|e| e.0);
+        let mut sched = Schedule::new(events);
+        let mut t = Duration::ZERO;
+        let mut seen = 0;
+        while !sched.is_done() {
+            t += Duration::from_millis(rng.next_range(1, 3_000));
+            if let Some(bw) = sched.poll(t) {
+                // poll returns the LATEST event <= t; count how many are due.
+                let due = sorted.iter().filter(|e| e.0 <= t).count();
+                assert!(due > seen, "case {case}: poll fired without due events");
+                assert_eq!(
+                    bw, sorted[due - 1].1,
+                    "case {case}: wrong latest event"
+                );
+                seen = due;
+            }
+        }
+        assert_eq!(seen, sorted.len(), "case {case}: events lost");
+    }
+}
+
+#[test]
+fn prop_json_never_panics_and_roundtrips_numbers() {
+    let mut rng = Prng::new(0x750A);
+    // Fuzz: random byte soup must return Ok or Err, never panic.
+    for _ in 0..CASES {
+        let len = rng.next_below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_below(94) + 32) as u8).collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = json::parse(&s);
+    }
+    // Integers round-trip exactly through the parser.
+    for case in 0..CASES {
+        let v = rng.next_range(0, 1 << 52) as i64 - (1 << 51);
+        let doc = format!("{{\"v\": {v}}}");
+        let parsed = json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("v").as_i64(), Some(v), "case {case}");
+    }
+}
+
+#[test]
+fn prop_summary_percentiles_ordered() {
+    let mut rng = Prng::new(0x57A75);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(500);
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 1000.0).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert!(s.min <= s.p50 && s.p50 <= s.p95, "case {case}");
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max, "case {case}");
+        assert!(s.min <= s.mean && s.mean <= s.max, "case {case}");
+        let mut w = Welford::default();
+        xs.iter().for_each(|&x| w.push(x));
+        assert!((w.mean() - s.mean).abs() < 1e-9, "case {case}");
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(percentile_sorted(&sorted, 100.0), s.max, "case {case}");
+    }
+}
