@@ -8,6 +8,11 @@
 //! - end-to-end single-frame inference per model
 //! - pipeline (re)build: cached vs uncached executables (the §Perf
 //!   optimisation and the ablation behind Dynamic Switching's speed)
+//! - parallel vs serial bring-up, cached vs uncached weight staging, and
+//!   overlapped vs sequential frame throughput (the perf layer)
+//!
+//! Also emits `BENCH_hot_path.json`, the machine-readable baseline future
+//! PRs diff against.
 
 mod common;
 
@@ -15,10 +20,10 @@ use std::sync::Arc;
 
 use neukonfig::bench::{bench, bench_measured, BenchConfig, Report};
 use neukonfig::coordinator::experiments::ExperimentSetup;
-use neukonfig::coordinator::{PlacementCase, Placement, ScenarioA};
+use neukonfig::coordinator::{PipelinedRunner, PlacementCase, Placement, ScenarioA};
 use neukonfig::device::FrameSource;
 use neukonfig::metrics::{fmt_duration, Table};
-use neukonfig::runtime::ChainExecutor;
+use neukonfig::runtime::{BuildOptions, ChainExecutor};
 
 fn main() -> anyhow::Result<()> {
     let cfg = BenchConfig::from_env();
@@ -34,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         "",
         &["operation", "mean", "p50", "p95", "max", "n"],
     );
+    let mut all: Vec<neukonfig::bench::BenchResult> = Vec::new();
     let mut push = |r: neukonfig::bench::BenchResult| {
         let s = &r.summary;
         t.row(vec![
@@ -44,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(std::time::Duration::from_secs_f64(s.max)),
             s.n.to_string(),
         ]);
+        all.push(r.clone());
         r
     };
 
@@ -79,6 +86,78 @@ fn main() -> anyhow::Result<()> {
             .unwrap();
     }));
 
+    // --- bring-up: serial vs parallel worker pool ------------------------
+    // Uncached so every iteration pays real compilation + staging — the
+    // work the pool actually parallelises.
+    let bringup_serial = push(bench("bring-up serial (uncached)", &cfg, || {
+        ChainExecutor::build_with(
+            env.edge.clone(),
+            &env.manifest,
+            0..n,
+            &env.weights,
+            BuildOptions::serial(false),
+        )
+        .unwrap();
+    }));
+    let bringup_parallel = push(bench("bring-up parallel (uncached)", &cfg, || {
+        ChainExecutor::build_with(
+            env.edge.clone(),
+            &env.manifest,
+            0..n,
+            &env.weights,
+            BuildOptions::parallel(false),
+        )
+        .unwrap();
+    }));
+
+    // --- weight staging: cold vs warm device-buffer cache ----------------
+    let staging_cold = push(bench("weight staging (cold cache)", &cfg, || {
+        env.edge.clear_weight_cache();
+        for layer in &env.manifest.layers {
+            env.edge
+                .layer_weight_buffers(&env.weights, layer, true)
+                .unwrap();
+        }
+    }));
+    let staging_warm = push(bench("weight staging (warm cache)", &cfg, || {
+        for layer in &env.manifest.layers {
+            env.edge
+                .layer_weight_buffers(&env.weights, layer, true)
+                .unwrap();
+        }
+    }));
+
+    // --- frame throughput: sequential vs overlapped ----------------------
+    const BURST: usize = 8;
+    let frames: Vec<_> = (0..BURST)
+        .map(|i| env.frame_literal(&cam.frame(i as u64)).unwrap())
+        .collect();
+    let runner = PipelinedRunner::new(2);
+    {
+        // Sanity: overlapped execution must be output-identical, in order.
+        let seq: Vec<Vec<f32>> = frames
+            .iter()
+            .map(|f| active.infer(f).unwrap().output.to_vec::<f32>().unwrap())
+            .collect();
+        let piped = runner.run(&active, &frames).unwrap();
+        assert_eq!(piped.len(), BURST);
+        for (s, p) in seq.iter().zip(&piped) {
+            assert_eq!(s, &p.output.to_vec::<f32>().unwrap(), "overlap changed outputs");
+        }
+    }
+    let seq_burst = push(bench(&format!("{BURST}-frame burst, sequential"), &cfg, || {
+        for f in &frames {
+            active.infer(f).unwrap();
+        }
+    }));
+    let piped_burst = push(bench(
+        &format!("{BURST}-frame burst, pipelined (depth 2)"),
+        &cfg,
+        || {
+            runner.run(&active, &frames).unwrap();
+        },
+    ));
+
     // --- container-sim control plane ------------------------------------
     push(bench_measured("pipeline init, same container (B2 init)", &cfg, || {
         let active = router.active();
@@ -101,8 +180,20 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(std::time::Duration::from_secs_f64(switch.summary.mean)),
         rebuild_uncached.summary.mean / rebuild_cached.summary.mean.max(1e-9),
     ));
+    report.note(format!(
+        "perf layer: parallel bring-up {:.2}x vs serial; warm weight cache \
+         {:.0}x vs cold staging; pipelined burst {:.2}x throughput \
+         ({:.1} vs {:.1} frames/s)",
+        bringup_serial.summary.mean / bringup_parallel.summary.mean.max(1e-9),
+        staging_cold.summary.mean / staging_warm.summary.mean.max(1e-9),
+        seq_burst.summary.mean / piped_burst.summary.mean.max(1e-9),
+        BURST as f64 / piped_burst.summary.mean.max(1e-9),
+        BURST as f64 / seq_burst.summary.mean.max(1e-9),
+    ));
     assert!(switch.summary.p95 < 0.98e-3, "switch p95 must beat the paper's 0.98 ms");
     report.print();
+    neukonfig::bench::write_json_baseline("BENCH_hot_path.json", "hot_path", &all)?;
+    println!("wrote BENCH_hot_path.json ({} rows)", all.len());
     let _ = Arc::strong_count(&env);
     Ok(())
 }

@@ -103,6 +103,47 @@ pub fn bench_measured(
     }
 }
 
+/// Render bench results as machine-readable JSON (the `BENCH_*.json`
+/// baselines future PRs diff against for a perf trajectory). Hand-rolled —
+/// no serde offline; times are seconds, matching [`Summary`].
+pub fn results_to_json(title: &str, results: &[BenchResult]) -> String {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"title\": \"{}\",\n", esc(title)));
+    out.push_str("  \"unit\": \"seconds\",\n");
+    out.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let s = &r.summary;
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"mean\": {}, \"std_dev\": {}, \
+             \"min\": {}, \"max\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}}}{}\n",
+            esc(&r.name),
+            s.n,
+            s.mean,
+            s.std_dev,
+            s.min,
+            s.max,
+            s.p50,
+            s.p95,
+            s.p99,
+            if i + 1 == results.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write a JSON baseline file (see [`results_to_json`]).
+pub fn write_json_baseline(
+    path: impl AsRef<std::path::Path>,
+    title: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    std::fs::write(path, results_to_json(title, results))
+}
+
 /// Paper-vs-measured report printed by each bench binary.
 #[derive(Debug, Default)]
 pub struct Report {
@@ -174,6 +215,21 @@ mod tests {
         assert!(md.contains("## Fig X"));
         assert!(md.contains("| v |"));
         assert!(md.contains("> shape"));
+    }
+
+    #[test]
+    fn json_baseline_round_trips() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(5) };
+        let a = bench_measured("op \"a\"", &cfg, || Duration::from_millis(10));
+        let b = bench_measured("op-b", &cfg, || Duration::from_millis(20));
+        let json = results_to_json("hot_path", &[a, b]);
+        let v = crate::util::json::parse(&json).expect("valid json");
+        assert_eq!(v.get("title").as_str(), Some("hot_path"));
+        let results = v.get("results").as_array().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").as_str(), Some("op \"a\""));
+        assert!((results[1].get("mean").as_f64().unwrap() - 0.02).abs() < 1e-9);
+        assert_eq!(results[0].get("n").as_usize(), Some(3));
     }
 
     #[test]

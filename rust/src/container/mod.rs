@@ -131,6 +131,11 @@ impl Container {
     pub fn state(&self) -> ContainerState {
         *self.state.lock().unwrap()
     }
+
+    /// Ledger-attributed footprint of this container (its reservation).
+    pub fn memory_mb(&self) -> f64 {
+        self._mem.mb
+    }
 }
 
 /// One host's container engine ("Docker daemon") — edge or cloud.
@@ -284,6 +289,13 @@ mod tests {
         h.stop(&c);
         drop(c);
         assert_eq!(h.ledger.in_use_mb(), 0.0);
+    }
+
+    #[test]
+    fn container_reports_reservation() {
+        let h = host();
+        let c = h.start("img", 321.0).unwrap();
+        assert_eq!(c.memory_mb(), 321.0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! * [`planner`] — Equation-1 split planning from the layer profile.
 //! * [`pause_resume`] — the baseline approach (§III-A).
 //! * [`switching`] — Dynamic Switching, Scenario A/B x Case 1/2 (§III-B).
+//! * [`runner`] — overlapped (pipelined) frame execution.
 //! * [`batcher`] — the bounded edge frame queue.
 //! * [`flow`] — frame-drop simulation during downtime windows (Figs 14/15).
 //! * [`state`] — the pipeline lifecycle state machine.
@@ -19,6 +20,7 @@ pub mod pause_resume;
 pub mod pipeline;
 pub mod planner;
 pub mod router;
+pub mod runner;
 pub mod server;
 pub mod state;
 pub mod switching;
@@ -28,6 +30,7 @@ pub use pause_resume::PauseResume;
 pub use pipeline::{EdgeCloudEnv, InferenceReport, Pipeline, Placement};
 pub use planner::{PartitionPlan, Planner};
 pub use router::{RouteOutcome, Router};
+pub use runner::PipelinedRunner;
 pub use server::{serve, ServeReport, ServerConfig, Strategy};
 pub use state::PipelineState;
 pub use switching::{PlacementCase, ScenarioA, ScenarioB};

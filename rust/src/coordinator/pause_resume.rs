@@ -26,6 +26,9 @@ impl PauseResume {
     /// Deploy the initial pipeline (fresh containers on both hosts). The
     /// naive application never caches compiled executables.
     pub fn deploy(env: Arc<EdgeCloudEnv>, initial_split: usize) -> Result<Self> {
+        // The naive app holds no proactive state: start from cold caches.
+        env.edge.clear_cache();
+        env.cloud.clear_cache();
         let p = env.build_pipeline_opts(initial_split, Placement::NewContainers, false)?;
         let router = Arc::new(Router::new(env.clock.clone(), Arc::new(p))?);
         Ok(PauseResume { env, router })
@@ -57,8 +60,13 @@ impl PauseResume {
         // sides inside the frozen containers.
         let t1 = clock.now();
         clock.sleep(self.env.cfg.costs.baseline_reload);
-        // use_cache = false: the naive application reloads the full model
-        // (the paper's Keras reload), not just the split delta.
+        // The naive application tears its whole model down: invalidate any
+        // compiled executables and staged weight buffers on both domains,
+        // then rebuild with use_cache = false (the paper's full Keras
+        // reload, not just the split delta). This keeps the ablation
+        // against Dynamic Switching's warm caches meaningful.
+        self.env.edge.clear_cache();
+        self.env.cloud.clear_cache();
         let new_pipe = self.env.build_pipeline_opts(
             new_split,
             Placement::Existing {

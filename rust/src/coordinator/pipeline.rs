@@ -12,7 +12,9 @@ use crate::clock::Clock;
 use crate::container::{Container, ContainerHost};
 use crate::models::ModelManifest;
 use crate::netsim::Link;
-use crate::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
+use crate::runtime::{
+    literal_from_f32, BuildOptions, ChainExecutor, Domain, WeightStore,
+};
 
 use super::state::PipelineState;
 
@@ -32,14 +34,30 @@ pub enum Placement {
 }
 
 /// Initialisation cost breakdown (feeds the downtime equations).
+///
+/// Bring-up is parallel (edge and cloud chains build concurrently, each on
+/// a worker pool), so the downtime equations consume the *wall-clock*
+/// fields while the `_cpu` fields report the cumulative work the pool did
+/// — what a serial bring-up would have paid.
 #[derive(Debug, Clone, Default)]
 pub struct InitStats {
     /// Container start time (zero for Placement::Existing).
     pub container_start: Duration,
-    /// Real PJRT compile time for both chains (the "model load").
+    /// Wall-clock compile share of the model load (summed over both
+    /// chains' apportioned walls; the chains themselves overlap).
     pub compile: Duration,
-    /// Weight-literal staging time.
+    /// Wall-clock weight-staging share of the model load.
     pub weights_upload: Duration,
+    /// Cumulative CPU spent compiling across every bring-up worker.
+    pub compile_cpu: Duration,
+    /// Cumulative CPU spent staging weights across every worker.
+    pub weights_upload_cpu: Duration,
+    /// Wall-clock of the whole model-load region (both chains, overlapped)
+    /// — the term that actually enters the downtime window.
+    pub model_load: Duration,
+    /// Weight-buffer cache hits/misses over both chains.
+    pub weight_cache_hits: u64,
+    pub weight_cache_misses: u64,
     /// Simulated application bring-up.
     pub app_bringup: Duration,
     /// Total on the experiment timeline.
@@ -100,36 +118,38 @@ impl Pipeline {
     }
 
     /// Same as [`Self::infer`] without the state gate (warmup, profiling).
+    ///
+    /// Every component of the report comes from its own authority, not
+    /// from clock deltas: the chains report their dilated execution times
+    /// and [`Link::transfer`] returns the queueing + serialisation time it
+    /// charged. The experiment clock is shared — control-plane work on
+    /// another thread (a concurrent standby rebuild, a `PipelinedRunner`
+    /// stage) advances it mid-frame, so `now()` deltas here would blame
+    /// that foreign time on this frame.
     pub fn infer_unchecked(&self, frame: &Literal) -> Result<InferenceReport> {
-        let t0 = self.clock.now();
         let (intermediate, edge_t) = self.edge_chain.run(frame, &self.clock)?;
-        let t1 = self.clock.now();
 
         // Ship the split tensor over the shaped uplink. Split 0 ships the
         // raw frame, split N ships the final output back (tiny).
-        let bytes = literal_bytes(&intermediate);
-        self.link.transfer(bytes);
-        let t2 = self.clock.now();
+        let t_transfer = self.link.transfer(literal_bytes(&intermediate));
 
         let (output, cloud_t) = self.cloud_chain.run(&intermediate, &self.clock)?;
-        let t3 = self.clock.now();
 
-        // edge/cloud timings come from the chain (dilated); transfer from
-        // the link on the timeline. Guard against clock jitter.
-        let _ = (t0, t1, t3);
         Ok(InferenceReport {
             t_edge: edge_t.total,
-            t_transfer: t2 - t1,
+            t_transfer,
             t_cloud: cloud_t.total,
             output,
         })
     }
 
-    /// Memory currently attributed to this pipeline's containers.
+    /// Memory currently attributed to this pipeline's containers on the
+    /// hosts' ledgers. With [`Placement::Existing`] the containers are
+    /// shared with the pipeline they were borrowed from, so (per Table I)
+    /// the footprint is attributed to both pipelines, not doubled on the
+    /// ledger itself.
     pub fn memory_mb(&self) -> f64 {
-        // Reservations live inside the containers; this is the configured
-        // per-pipeline footprint when the pipeline owns its containers.
-        0.0 // accounted at the ledger level; see ContainerHost::ledger
+        self.edge_container.memory_mb() + self.cloud_container.memory_mb()
     }
 }
 
@@ -253,42 +273,84 @@ impl EdgeCloudEnv {
         // container; our PJRT path has no equivalent).
         self.clock.sleep(self.cfg.costs.app_bringup);
 
-        // Real model load: compile the partition executables + stage weights.
-        let edge_chain = ChainExecutor::build_opts(
-            self.edge.clone(),
-            &self.manifest,
-            0..split,
-            &self.weights,
-            use_cache,
-        )?;
-        let cloud_chain = ChainExecutor::build_opts(
-            self.cloud.clone(),
-            &self.manifest,
-            split..self.manifest.num_layers(),
-            &self.weights,
-            use_cache,
-        )?;
+        // Real model load: compile the partition executables + stage
+        // weights. The two chains live on different domains (different
+        // PJRT clients), so they build concurrently — the edge and cloud
+        // servers initialise in parallel in the paper's testbed too.
+        let opts = BuildOptions { use_cache, ..Default::default() };
+        let n = self.manifest.num_layers();
+        let t_load = self.clock.now();
+        let (edge_chain, cloud_chain) = if opts.parallel {
+            let mut cloud_res: Option<Result<ChainExecutor>> = None;
+            let edge_res = std::thread::scope(|s| {
+                let cloud_handle = s.spawn(|| {
+                    ChainExecutor::build_with(
+                        self.cloud.clone(),
+                        &self.manifest,
+                        split..n,
+                        &self.weights,
+                        opts,
+                    )
+                });
+                let edge = ChainExecutor::build_with(
+                    self.edge.clone(),
+                    &self.manifest,
+                    0..split,
+                    &self.weights,
+                    opts,
+                );
+                cloud_res = Some(
+                    cloud_handle
+                        .join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("cloud bring-up panicked"))),
+                );
+                edge
+            });
+            (edge_res?, cloud_res.expect("cloud chain built")?)
+        } else {
+            (
+                ChainExecutor::build_with(
+                    self.edge.clone(),
+                    &self.manifest,
+                    0..split,
+                    &self.weights,
+                    opts,
+                )?,
+                ChainExecutor::build_with(
+                    self.cloud.clone(),
+                    &self.manifest,
+                    split..n,
+                    &self.weights,
+                    opts,
+                )?,
+            )
+        };
+        let model_load = self.clock.now() - t_load;
 
-        let compile = edge_chain.build_stats.compile + cloud_chain.build_stats.compile;
-        let upload =
-            edge_chain.build_stats.weights_upload + cloud_chain.build_stats.weights_upload;
+        let es = &edge_chain.build_stats;
+        let cs = &cloud_chain.build_stats;
 
         Ok(Pipeline {
             id: NEXT_PIPELINE_ID.fetch_add(1, Ordering::Relaxed),
             split,
-            edge_chain,
-            cloud_chain,
             link: self.link.clone(),
             clock: self.clock.clone(),
             edge_container: edge_c,
             cloud_container: cloud_c,
             init_stats: InitStats {
                 container_start,
-                compile,
-                weights_upload: upload,
+                compile: es.compile + cs.compile,
+                weights_upload: es.weights_upload + cs.weights_upload,
+                compile_cpu: es.compile_cpu + cs.compile_cpu,
+                weights_upload_cpu: es.weights_upload_cpu + cs.weights_upload_cpu,
+                model_load,
+                weight_cache_hits: es.weight_cache_hits + cs.weight_cache_hits,
+                weight_cache_misses: es.weight_cache_misses + cs.weight_cache_misses,
                 app_bringup: self.cfg.costs.app_bringup,
                 total: self.clock.now() - t0,
             },
+            edge_chain,
+            cloud_chain,
             state: Mutex::new(PipelineState::Initialising),
         })
     }
@@ -298,18 +360,58 @@ impl EdgeCloudEnv {
         literal_from_f32(&frame.shape, &frame.pixels)
     }
 
-    /// Proactively compile every partition unit on both domains (fills the
-    /// executable caches). Dynamic Switching calls this at deployment so a
-    /// later repartition — to *any* split — never pays compilation inside
-    /// its downtime window (§III-B "redeployment approaches must be
-    /// proactive"). Returns the warming time (deployment cost, not
-    /// downtime).
+    /// Proactively compile every partition unit AND stage its weight
+    /// buffers on both domains (fills the executable and weight caches).
+    /// Dynamic Switching calls this at deployment so a later repartition —
+    /// to *any* split — never pays compilation or weight upload inside its
+    /// downtime window (§III-B "redeployment approaches must be
+    /// proactive"). The (domain x layer) jobs run on a scoped worker pool;
+    /// returns the warming wall time (deployment cost, not downtime).
     pub fn warm_executables(&self) -> Result<Duration> {
         let t0 = self.clock.now();
-        for domain in [&self.edge, &self.cloud] {
-            for i in 0..self.manifest.num_layers() {
-                domain.compile_hlo(&self.manifest.hlo_path(i), true)?;
+        let n = self.manifest.num_layers();
+        let domains = [&self.edge, &self.cloud];
+        let jobs: Vec<(usize, usize)> = (0..domains.len())
+            .flat_map(|d| (0..n).map(move |i| (d, i)))
+            .collect();
+        let cursor = std::sync::atomic::AtomicUsize::new(0);
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let workers = if crate::runtime::default_parallel_bringup() {
+            std::thread::available_parallelism()
+                .map(|w| w.get())
+                .unwrap_or(4)
+                .min(jobs.len())
+                .max(1)
+        } else {
+            1
+        };
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let k = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if k >= jobs.len() || failure.lock().unwrap().is_some() {
+                        break;
+                    }
+                    let (d, i) = jobs[k];
+                    let domain = domains[d];
+                    let warm_one = || -> Result<()> {
+                        domain.compile_hlo(&self.manifest.hlo_path(i), true)?;
+                        domain.layer_weight_buffers(
+                            &self.weights,
+                            &self.manifest.layers[i],
+                            true,
+                        )?;
+                        Ok(())
+                    };
+                    if let Err(e) = warm_one() {
+                        failure.lock().unwrap().get_or_insert(e);
+                        break;
+                    }
+                });
             }
+        });
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
         }
         Ok(self.clock.now() - t0)
     }

@@ -18,6 +18,7 @@ use crate::clock::Clock;
 use crate::metrics::{FrameStats, LatencyHistogram};
 
 use super::pipeline::{InferenceReport, Pipeline};
+use super::runner::PipelinedRunner;
 use super::state::PipelineState;
 
 /// Outcome of routing one frame.
@@ -79,6 +80,39 @@ impl Router {
         self.latency.record(report.total());
         self.stats.processed();
         Ok(RouteOutcome::Processed(report))
+    }
+
+    /// Route a burst of frames with edge/cloud overlap (the
+    /// [`PipelinedRunner`] path). The active pipeline is pinned for the
+    /// whole burst — a concurrent switch takes effect at the next call —
+    /// and per-frame stats/latency are recorded exactly as [`Self::route`]
+    /// does. While paused, every frame in the burst is dropped.
+    pub fn route_batch(
+        &self,
+        frames: &[Literal],
+        runner: PipelinedRunner,
+    ) -> Result<Vec<RouteOutcome>> {
+        if self.is_paused() {
+            let mut out = Vec::with_capacity(frames.len());
+            for _ in frames {
+                self.stats.produced();
+                self.stats.dropped(self.in_downtime());
+                out.push(RouteOutcome::DroppedPaused);
+            }
+            return Ok(out);
+        }
+        for _ in frames {
+            self.stats.produced();
+        }
+        let pipeline = self.active();
+        let reports = runner.run(&pipeline, frames)?;
+        let mut out = Vec::with_capacity(reports.len());
+        for report in reports {
+            self.latency.record(report.total());
+            self.stats.processed();
+            out.push(RouteOutcome::Processed(report));
+        }
+        Ok(out)
     }
 
     /// Atomically redirect traffic to `new` (Dynamic Switching's

@@ -1,0 +1,125 @@
+//! Overlapped frame execution: edge compute of frame N+1 runs concurrently
+//! with the transfer + cloud compute of frame N.
+//!
+//! Sequential `Pipeline::infer` leaves the edge idle while a frame is on
+//! the wire or in the cloud — the classic pipeline bubble. The runner
+//! splits each frame at the partition boundary: a producer thread runs the
+//! edge chain and hands intermediates through a *bounded* channel to the
+//! consumer, which does transfer + cloud. Back-pressure (the channel
+//! depth) bounds in-flight frames so edge memory stays flat.
+//!
+//! Ordering and timing semantics are preserved exactly:
+//! * frames are produced, shipped, and consumed strictly in order — a
+//!   single producer and single consumer over a FIFO channel, so the
+//!   returned [`InferenceReport`]s are in frame order;
+//! * every report component keeps its own authority (chain-reported
+//!   dilated times, [`Link::transfer`]'s returned cost), identical to the
+//!   sequential path, so per-frame numbers match `infer` while wall-clock
+//!   throughput improves;
+//! * `cpu_scale` dilation still lands on the shared [`Clock`]: each
+//!   chain's dilation surplus is injected exactly once per frame, same as
+//!   sequential execution. Only real elapsed time overlaps.
+
+use std::sync::mpsc::sync_channel;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::runtime::ChainTiming;
+
+use super::pipeline::{InferenceReport, Pipeline};
+
+/// Default number of in-flight intermediates between edge and cloud.
+pub const DEFAULT_DEPTH: usize = 2;
+
+/// Two-stage overlapped executor over one [`Pipeline`].
+#[derive(Debug, Clone, Copy)]
+pub struct PipelinedRunner {
+    /// Bounded-channel capacity: how many edge outputs may be in flight
+    /// before the edge stalls (1 = lock-step, still overlaps one frame).
+    pub depth: usize,
+}
+
+impl Default for PipelinedRunner {
+    fn default() -> Self {
+        PipelinedRunner { depth: DEFAULT_DEPTH }
+    }
+}
+
+impl PipelinedRunner {
+    pub fn new(depth: usize) -> Self {
+        PipelinedRunner { depth: depth.max(1) }
+    }
+
+    /// Run `frames` through `pipeline` with edge/cloud overlap, returning
+    /// one report per frame in frame order. Fails (like
+    /// [`Pipeline::infer`]) if the pipeline is not serving traffic.
+    pub fn run(&self, pipeline: &Pipeline, frames: &[Literal]) -> Result<Vec<InferenceReport>> {
+        if !pipeline.state().serves_traffic() {
+            bail!(
+                "pipeline {} is {}, not serving",
+                pipeline.id,
+                pipeline.state()
+            );
+        }
+        self.run_unchecked(pipeline, frames)
+    }
+
+    /// [`Self::run`] without the state gate (warmup, benches).
+    pub fn run_unchecked(
+        &self,
+        pipeline: &Pipeline,
+        frames: &[Literal],
+    ) -> Result<Vec<InferenceReport>> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (tx, rx) = sync_channel::<Result<(Literal, ChainTiming)>>(self.depth);
+        let mut reports = Vec::with_capacity(frames.len());
+
+        std::thread::scope(|s| -> Result<()> {
+            let producer = s.spawn(move || {
+                for frame in frames {
+                    let staged = pipeline.edge_chain.run(frame, &pipeline.clock);
+                    let failed = staged.is_err();
+                    // A send error means the consumer hung up (it hit its
+                    // own error and dropped `rx`) — stop producing.
+                    if tx.send(staged).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+
+            for _ in 0..frames.len() {
+                let (intermediate, edge_t) = match rx.recv() {
+                    Ok(staged) => staged?,
+                    // Producer hung up early: it already sent the error we
+                    // consumed (or panicked, caught at join below).
+                    Err(_) => break,
+                };
+                let t_transfer = pipeline.link.transfer(intermediate.size_bytes());
+                let (output, cloud_t) = pipeline.cloud_chain.run(&intermediate, &pipeline.clock)?;
+                reports.push(InferenceReport {
+                    t_edge: edge_t.total,
+                    t_transfer,
+                    t_cloud: cloud_t.total,
+                    output,
+                });
+            }
+            drop(rx);
+            producer
+                .join()
+                .map_err(|_| anyhow!("edge stage panicked"))?;
+            Ok(())
+        })?;
+
+        if reports.len() != frames.len() {
+            bail!(
+                "pipelined run produced {} of {} reports",
+                reports.len(),
+                frames.len()
+            );
+        }
+        Ok(reports)
+    }
+}

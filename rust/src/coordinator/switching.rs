@@ -63,8 +63,9 @@ impl ScenarioA {
         };
         let standby = Arc::new(env.build_pipeline(standby_split, placement)?);
         standby.transition(PipelineState::Standby)?;
-        // Proactive: precompile every unit on both domains so later
-        // ensure_standby() rebuilds never pay compilation.
+        // Proactive: precompile every unit AND stage its weight buffers on
+        // both domains so later ensure_standby() rebuilds pay neither
+        // compilation nor weight upload (weights_upload ~ 0).
         env.warm_executables()?;
         Ok(ScenarioA { env, router, case, standby: Mutex::new(Some(standby)) })
     }
@@ -147,8 +148,9 @@ impl ScenarioB {
     pub fn deploy(env: Arc<EdgeCloudEnv>, initial_split: usize) -> Result<ScenarioBBuilder> {
         let active = Arc::new(env.build_pipeline(initial_split, Placement::NewContainers)?);
         let router = Arc::new(Router::new(env.clock.clone(), active)?);
-        // Proactive (§III-B): precompile every unit on both domains at
-        // deployment so the repartition window never pays compilation.
+        // Proactive (§III-B): precompile every unit and stage its weight
+        // buffers on both domains at deployment so the repartition window
+        // pays neither compilation nor weight upload.
         env.warm_executables()?;
         Ok(ScenarioBBuilder { env, router })
     }

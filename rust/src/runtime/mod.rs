@@ -6,11 +6,18 @@
 //! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
 //! HLO *text* is the interchange format (jax >= 0.5 protos are rejected by
 //! the bundled xla_extension 0.5.1).
+//!
+//! Bring-up is parallel by default: partition units compile and stage their
+//! weights concurrently on a small in-tree worker pool (scoped threads, no
+//! external crates), because pipeline initialisation is the body of every
+//! downtime window in the paper's equations. `NEUKONFIG_SERIAL_BRINGUP=1`
+//! forces the serial path; [`BuildOptions`] gives callers explicit control.
 
 pub mod weights;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -20,6 +27,51 @@ use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use crate::clock::Clock;
 use crate::models::{LayerManifest, ModelManifest};
 pub use weights::WeightStore;
+
+/// How a chain bring-up runs: cache usage + parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOptions {
+    /// Use the per-domain executable and weight-buffer caches. Dynamic
+    /// Switching's proactive design sets this; the naive Pause-and-Resume
+    /// baseline clears/bypasses both (the Keras app reloads from scratch).
+    pub use_cache: bool,
+    /// Compile + stage layers concurrently on a worker pool.
+    pub parallel: bool,
+    /// Worker-pool size; 0 = min(available parallelism, layer count).
+    pub max_workers: usize,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            use_cache: true,
+            parallel: default_parallel_bringup(),
+            max_workers: 0,
+        }
+    }
+}
+
+impl BuildOptions {
+    pub fn serial(use_cache: bool) -> Self {
+        BuildOptions { use_cache, parallel: false, max_workers: 0 }
+    }
+
+    pub fn parallel(use_cache: bool) -> Self {
+        BuildOptions { use_cache, parallel: true, max_workers: 0 }
+    }
+}
+
+/// `NEUKONFIG_SERIAL_BRINGUP=1` disables bring-up parallelism globally
+/// (ablation knob; also the escape hatch for single-core CI runners).
+pub fn default_parallel_bringup() -> bool {
+    std::env::var("NEUKONFIG_SERIAL_BRINGUP").as_deref() != Ok("1")
+}
+
+fn effective_workers(max_workers: usize, jobs: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let cap = if max_workers == 0 { hw } else { max_workers.min(hw) };
+    cap.min(jobs).max(1)
+}
 
 /// An execution domain — the "edge server" or the "cloud server".
 ///
@@ -34,13 +86,21 @@ pub struct Domain {
     /// bits so the stress controller can adjust it at runtime. The paper's
     /// cloud (8 cores) vs edge (4 cores) is modelled as cloud 2.0 vs edge
     /// 1.0; stress-ng CPU availability multiplies on top.
-    cpu_scale_bits: std::sync::atomic::AtomicU64,
+    cpu_scale_bits: AtomicU64,
     /// Compiled-executable cache keyed by HLO path. Per-layer artifacts
     /// mean a *repartition* never introduces a new module on a domain that
     /// has already run that layer — Dynamic Switching exploits this (the
     /// proactive design of SIII-B); the naive Pause-and-Resume baseline
     /// reloads everything uncached, like the Keras app in the paper.
     exe_cache: Mutex<HashMap<PathBuf, Arc<PjRtLoadedExecutable>>>,
+    /// Staged-weight cache keyed by (layer index, layer name), mirroring
+    /// `exe_cache`: once a layer's parameters are device buffers on this
+    /// domain, a repartition to any split re-uses them instead of
+    /// re-decoding bytes and re-uploading — `weights_upload` in the
+    /// Dynamic Switching path drops to near zero.
+    weight_cache: Mutex<HashMap<(usize, String), Arc<Vec<PjRtBuffer>>>>,
+    weight_hits: AtomicU64,
+    weight_misses: AtomicU64,
 }
 
 impl Domain {
@@ -49,8 +109,11 @@ impl Domain {
         Ok(Arc::new(Domain {
             name: name.into(),
             client,
-            cpu_scale_bits: std::sync::atomic::AtomicU64::new(cpu_scale.to_bits()),
+            cpu_scale_bits: AtomicU64::new(cpu_scale.to_bits()),
             exe_cache: Mutex::new(HashMap::new()),
+            weight_cache: Mutex::new(HashMap::new()),
+            weight_hits: AtomicU64::new(0),
+            weight_misses: AtomicU64::new(0),
         }))
     }
 
@@ -59,14 +122,13 @@ impl Domain {
     }
 
     pub fn cpu_scale(&self) -> f64 {
-        f64::from_bits(self.cpu_scale_bits.load(std::sync::atomic::Ordering::Relaxed))
+        f64::from_bits(self.cpu_scale_bits.load(Ordering::Relaxed))
     }
 
     /// Adjust the effective CPU speed (stress-ng analogue).
     pub fn set_cpu_scale(&self, scale: f64) {
         assert!(scale > 0.0, "cpu scale must be positive");
-        self.cpu_scale_bits
-            .store(scale.to_bits(), std::sync::atomic::Ordering::Relaxed);
+        self.cpu_scale_bits.store(scale.to_bits(), Ordering::Relaxed);
     }
 
     /// Load + compile an HLO module, with optional caching.
@@ -93,12 +155,64 @@ impl Domain {
         Ok(exe)
     }
 
+    /// Stage one layer's parameters as device buffers, through the
+    /// per-domain weight cache. Returns the buffers and whether this was a
+    /// cache hit. With `use_cache = false` the cache is neither read nor
+    /// populated (the naive-baseline path).
+    pub fn layer_weight_buffers(
+        &self,
+        weights: &WeightStore,
+        layer: &LayerManifest,
+        use_cache: bool,
+    ) -> Result<(Arc<Vec<PjRtBuffer>>, bool)> {
+        let key = (layer.index, layer.name.clone());
+        if use_cache {
+            if let Some(bufs) = self.weight_cache.lock().unwrap().get(&key) {
+                self.weight_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((bufs.clone(), true));
+            }
+        }
+        let bufs = Arc::new(weights.layer_buffers(&self.client, layer)?);
+        if use_cache {
+            self.weight_misses.fetch_add(1, Ordering::Relaxed);
+            self.weight_cache.lock().unwrap().insert(key, bufs.clone());
+        }
+        Ok((bufs, false))
+    }
+
     pub fn cache_len(&self) -> usize {
         self.exe_cache.lock().unwrap().len()
     }
 
+    pub fn weight_cache_len(&self) -> usize {
+        self.weight_cache.lock().unwrap().len()
+    }
+
+    /// (hits, misses) of the weight-buffer cache since construction (or the
+    /// last [`Self::reset_weight_cache_stats`]).
+    pub fn weight_cache_stats(&self) -> (u64, u64) {
+        (
+            self.weight_hits.load(Ordering::Relaxed),
+            self.weight_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn reset_weight_cache_stats(&self) {
+        self.weight_hits.store(0, Ordering::Relaxed);
+        self.weight_misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Drop every cached executable *and* staged weight buffer — the
+    /// invalidation path that keeps the Pause-and-Resume ablation honest
+    /// (the naive app tears its whole model down).
     pub fn clear_cache(&self) {
         self.exe_cache.lock().unwrap().clear();
+        self.weight_cache.lock().unwrap().clear();
+    }
+
+    /// Drop only the staged weight buffers.
+    pub fn clear_weight_cache(&self) {
+        self.weight_cache.lock().unwrap().clear();
     }
 }
 
@@ -117,22 +231,40 @@ pub fn literal_from_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
 
 /// Cost breakdown of building a chain (the "model load" part of pipeline
 /// initialisation the paper's downtime windows contain).
+///
+/// Wall-clock and cumulative-CPU are reported separately because bring-up
+/// is parallel: the downtime equations consume wall-clock (what the service
+/// outage actually lasted), while the CPU fields keep the books honest
+/// about how much work the pool did (and what a serial bring-up would have
+/// paid). In the serial path the two coincide.
 #[derive(Debug, Clone, Default)]
 pub struct BuildStats {
+    /// Wall-clock share of the build spent compiling. Under parallel
+    /// bring-up the per-phase wall is not separable, so the total build
+    /// wall is apportioned by each phase's CPU share.
     pub compile: Duration,
+    /// Wall-clock share of the build spent staging weights.
     pub weights_upload: Duration,
+    /// Cumulative CPU time across all workers spent compiling.
+    pub compile_cpu: Duration,
+    /// Cumulative CPU time across all workers staging weights.
+    pub weights_upload_cpu: Duration,
     pub num_layers: usize,
+    /// Weight-buffer cache hits/misses during this build.
+    pub weight_cache_hits: u64,
+    pub weight_cache_misses: u64,
 }
 
 /// One compiled partition unit, ready to execute.
 ///
-/// Parameters are staged as device buffers once at build time; per-frame
-/// execution chains device buffers between layers and reads back to the
-/// host only at the chain boundary (EXPERIMENTS.md §Perf).
+/// Parameters are staged as device buffers once and shared (`Arc`) through
+/// the per-domain weight cache; per-frame execution chains device buffers
+/// between layers and reads back to the host only at the chain boundary
+/// (EXPERIMENTS.md §Perf).
 pub struct LayerExec {
     pub manifest: LayerManifest,
     exe: Arc<PjRtLoadedExecutable>,
-    param_bufs: Vec<PjRtBuffer>,
+    param_bufs: Arc<Vec<PjRtBuffer>>,
 }
 
 impl LayerExec {
@@ -180,6 +312,9 @@ pub struct ChainExecutor {
     pub build_stats: BuildStats,
 }
 
+/// (layer, compile time, upload time, weight-cache hit) for one unit.
+type BuiltLayer = (LayerExec, Duration, Duration, bool);
+
 impl ChainExecutor {
     /// Compile units `range` of `manifest` on `domain` and stage their
     /// weights. This is real measured work — the heart of every pipeline
@@ -190,10 +325,10 @@ impl ChainExecutor {
         range: std::ops::Range<usize>,
         weights: &WeightStore,
     ) -> Result<Self> {
-        Self::build_opts(domain, manifest, range, weights, true)
+        Self::build_with(domain, manifest, range, weights, BuildOptions::default())
     }
 
-    /// [`Self::build`] without the executable cache — models a naive
+    /// [`Self::build`] without the executable/weight caches — models a naive
     /// application that reloads the model from scratch (the Pause-and-
     /// Resume baseline).
     pub fn build_uncached(
@@ -205,6 +340,7 @@ impl ChainExecutor {
         Self::build_opts(domain, manifest, range, weights, false)
     }
 
+    /// Back-compat shim: cache control only, default parallelism.
     pub fn build_opts(
         domain: Arc<Domain>,
         manifest: &ModelManifest,
@@ -212,34 +348,153 @@ impl ChainExecutor {
         weights: &WeightStore,
         use_cache: bool,
     ) -> Result<Self> {
+        Self::build_with(
+            domain,
+            manifest,
+            range,
+            weights,
+            BuildOptions { use_cache, ..Default::default() },
+        )
+    }
+
+    /// Full-control build: serial or pooled-parallel bring-up.
+    pub fn build_with(
+        domain: Arc<Domain>,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+        opts: BuildOptions,
+    ) -> Result<Self> {
         anyhow::ensure!(range.end <= manifest.num_layers(), "range out of bounds");
-        let mut layers = Vec::with_capacity(range.len());
-        let mut compile = Duration::ZERO;
-        let mut upload = Duration::ZERO;
-        for i in range.clone() {
-            let lm = &manifest.layers[i];
-            let t0 = Instant::now();
-            let exe = domain.compile_hlo(&manifest.hlo_path(i), use_cache)?;
-            compile += t0.elapsed();
+        let t_build = Instant::now();
+        let built = if opts.parallel && range.len() > 1 {
+            Self::build_layers_parallel(&domain, manifest, range.clone(), weights, opts)?
+        } else {
+            Self::build_layers_serial(&domain, manifest, range.clone(), weights, opts)?
+        };
+        let wall = t_build.elapsed();
 
-            let t1 = Instant::now();
-            let param_bufs = weights
-                .layer_buffers(domain.client(), lm)
-                .with_context(|| format!("weights for {}", lm.name))?;
-            upload += t1.elapsed();
-
-            layers.push(LayerExec { manifest: lm.clone(), exe, param_bufs });
+        let mut layers = Vec::with_capacity(built.len());
+        let mut compile_cpu = Duration::ZERO;
+        let mut upload_cpu = Duration::ZERO;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for (layer, compile, upload, hit) in built {
+            compile_cpu += compile;
+            upload_cpu += upload;
+            if hit {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            layers.push(layer);
         }
+        // Apportion the build wall between the two phases by CPU share so
+        // `compile + weights_upload ~= wall` even when workers overlap.
+        let cpu_total = compile_cpu + upload_cpu;
+        let (compile_wall, upload_wall) = if cpu_total.is_zero() {
+            (Duration::ZERO, Duration::ZERO)
+        } else {
+            let frac = compile_cpu.as_secs_f64() / cpu_total.as_secs_f64();
+            (wall.mul_f64(frac), wall.mul_f64(1.0 - frac))
+        };
         Ok(ChainExecutor {
             domain,
             range: range.clone(),
             build_stats: BuildStats {
-                compile,
-                weights_upload: upload,
+                compile: compile_wall,
+                weights_upload: upload_wall,
+                compile_cpu,
+                weights_upload_cpu: upload_cpu,
                 num_layers: range.len(),
+                weight_cache_hits: hits,
+                weight_cache_misses: misses,
             },
             layers,
         })
+    }
+
+    fn build_one(
+        domain: &Domain,
+        manifest: &ModelManifest,
+        i: usize,
+        weights: &WeightStore,
+        use_cache: bool,
+    ) -> Result<BuiltLayer> {
+        let lm = &manifest.layers[i];
+        let t0 = Instant::now();
+        let exe = domain.compile_hlo(&manifest.hlo_path(i), use_cache)?;
+        let compile = t0.elapsed();
+
+        let t1 = Instant::now();
+        let (param_bufs, hit) = domain
+            .layer_weight_buffers(weights, lm, use_cache)
+            .with_context(|| format!("weights for {}", lm.name))?;
+        let upload = t1.elapsed();
+
+        Ok((LayerExec { manifest: lm.clone(), exe, param_bufs }, compile, upload, hit))
+    }
+
+    fn build_layers_serial(
+        domain: &Domain,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+        opts: BuildOptions,
+    ) -> Result<Vec<BuiltLayer>> {
+        range
+            .map(|i| Self::build_one(domain, manifest, i, weights, opts.use_cache))
+            .collect()
+    }
+
+    /// Pooled bring-up: a shared atomic cursor hands unit indices to
+    /// scoped worker threads; results land in per-unit slots so chain
+    /// order is preserved regardless of completion order.
+    fn build_layers_parallel(
+        domain: &Arc<Domain>,
+        manifest: &ModelManifest,
+        range: std::ops::Range<usize>,
+        weights: &WeightStore,
+        opts: BuildOptions,
+    ) -> Result<Vec<BuiltLayer>> {
+        let indices: Vec<usize> = range.collect();
+        let n = indices.len();
+        let workers = effective_workers(opts.max_workers, n);
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<BuiltLayer>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k >= n || failure.lock().unwrap().is_some() {
+                        break;
+                    }
+                    match Self::build_one(domain, manifest, indices[k], weights, opts.use_cache)
+                    {
+                        Ok(built) => *slots[k].lock().unwrap() = Some(built),
+                        Err(e) => {
+                            failure.lock().unwrap().get_or_insert(e);
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(k, slot)| {
+                slot.into_inner()
+                    .unwrap()
+                    .ok_or_else(|| anyhow!("parallel bring-up lost unit {}", indices[k]))
+            })
+            .collect()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -269,7 +524,7 @@ impl ChainExecutor {
     /// Execute without timing dilation (profiling / warmup).
     pub fn run_raw(&self, input: &Literal) -> Result<Literal> {
         if self.layers.is_empty() {
-            return Ok(clone_literal(input));
+            return clone_literal(input);
         }
         let client = self.domain.client();
         let mut buf = client
@@ -309,6 +564,8 @@ pub fn build_fused_exec(
         entry.split..manifest.num_layers()
     };
     let exe = domain.compile_hlo(&manifest.dir.join(hlo), true)?;
+    // Fused modules take the concatenated parameter list, which cannot
+    // share the per-layer cached Arcs — stage directly.
     let mut param_bufs = Vec::new();
     for i in range.clone() {
         param_bufs.extend(weights.layer_buffers(domain.client(), &manifest.layers[i])?);
@@ -332,16 +589,53 @@ pub fn build_fused_exec(
             params: vec![],
         },
         exe,
-        param_bufs,
+        param_bufs: Arc::new(param_bufs),
     })
 }
 
-/// Literal has no Clone in the xla crate; round-trip through raw f32.
-pub fn clone_literal(l: &Literal) -> Literal {
+/// Literal has no Clone in the xla crate; copy the raw bytes straight into
+/// the new literal (single copy — no `to_vec::<f32>` decode/rebuild round
+/// trip).
+pub fn clone_literal(l: &Literal) -> Result<Literal> {
     let shape = l
         .array_shape()
-        .expect("clone_literal: non-array literal");
+        .map_err(|e| anyhow!("clone_literal: non-array literal: {e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>().expect("clone_literal: non-f32 literal");
-    literal_from_f32(&dims, &data).expect("clone_literal: rebuild")
+    let expected: usize = dims.iter().product::<usize>() * 4;
+    let raw = l.raw_buf();
+    anyhow::ensure!(
+        raw.len() == expected,
+        "clone_literal: {} raw bytes but f32 shape {dims:?} needs {expected}",
+        raw.len()
+    );
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &dims, raw)
+        .map_err(|e| anyhow!("clone_literal: rebuild: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_options_defaults() {
+        let o = BuildOptions::default();
+        assert!(o.use_cache);
+        assert_eq!(o.max_workers, 0);
+        let s = BuildOptions::serial(false);
+        assert!(!s.parallel);
+        assert!(!s.use_cache);
+        let p = BuildOptions::parallel(true);
+        assert!(p.parallel);
+        assert!(p.use_cache);
+    }
+
+    #[test]
+    fn worker_count_bounded() {
+        assert_eq!(effective_workers(0, 0), 1);
+        assert_eq!(effective_workers(0, 1), 1);
+        assert_eq!(effective_workers(1, 64), 1);
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        assert!(effective_workers(0, 1024) <= hw);
+        assert!(effective_workers(2, 1024) <= 2);
+    }
 }

@@ -4,8 +4,12 @@
 //! Weights are runtime inputs (not HLO constants) — uploading them is part
 //! of the pipeline-initialisation cost the paper measures as part of
 //! container/model startup, and it keeps the HLO text artifacts small.
+//!
+//! The blob is decoded from little-endian bytes to f32 exactly once per
+//! store (lazily, shared across clones); every staging call after that is
+//! a zero-copy slice view, so repartition bring-up never re-decodes.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, Literal, PjRtBuffer, PjRtClient};
@@ -16,6 +20,9 @@ use crate::models::{LayerManifest, ModelManifest};
 #[derive(Clone)]
 pub struct WeightStore {
     blob: Arc<Vec<u8>>,
+    /// Decode-once f32 view of the blob (also fixes its 1-byte alignment).
+    /// Lazily filled on first staging; clones share the decoded copy.
+    floats: Arc<OnceLock<Vec<f32>>>,
 }
 
 impl WeightStore {
@@ -31,12 +38,15 @@ impl WeightStore {
                 manifest.weights_bytes
             );
         }
-        Ok(WeightStore { blob: Arc::new(blob) })
+        Ok(Self::from_bytes(blob))
     }
 
     /// In-memory store (tests).
     pub fn from_bytes(blob: Vec<u8>) -> Self {
-        WeightStore { blob: Arc::new(blob) }
+        WeightStore {
+            blob: Arc::new(blob),
+            floats: Arc::new(OnceLock::new()),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -56,9 +66,43 @@ impl WeightStore {
         Ok(&self.blob[p.offset_bytes..end])
     }
 
+    /// The whole blob as f32, decoded at most once per store (trailing
+    /// bytes that do not fill a full f32 are ignored).
+    pub fn as_f32(&self) -> &[f32] {
+        self.floats.get_or_init(|| {
+            self.blob
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        })
+    }
+
+    /// Zero-copy f32 view of one parameter. Offsets in the manifest are
+    /// sums of f32 tensor sizes, so they are always 4-byte multiples; a
+    /// misaligned entry is a packer bug and is rejected.
+    pub fn param_f32(&self, p: &crate::models::ParamEntry) -> Result<&[f32]> {
+        if p.offset_bytes % 4 != 0 || p.size_bytes % 4 != 0 {
+            bail!(
+                "param {} [{}; {} bytes) is not f32-aligned",
+                p.name,
+                p.offset_bytes,
+                p.size_bytes
+            );
+        }
+        let start = p.offset_bytes / 4;
+        let end = start + p.size_bytes / 4;
+        let floats = self.as_f32();
+        if end > floats.len() {
+            bail!("param {} [{}..{}) outside weights.bin", p.name, p.offset_bytes, end * 4);
+        }
+        Ok(&floats[start..end])
+    }
+
     /// Stage one layer's parameters as device buffers, in declaration
     /// order — exactly the positional arguments `unit(x, *params)` expects
-    /// after x. This is the real "model load" data movement.
+    /// after x. This is the real "model load" data movement. (Callers on
+    /// the repartition path go through `Domain::layer_weight_buffers`,
+    /// which caches the result per domain.)
     pub fn layer_buffers(
         &self,
         client: &PjRtClient,
@@ -68,17 +112,14 @@ impl WeightStore {
             .params
             .iter()
             .map(|p| {
-                let bytes = self.param_bytes(p)?;
                 // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes
                 // its ElementType discriminant where PJRT expects a
-                // PrimitiveType, corrupting the dtype. Decode to f32 (also
-                // fixes the blob's 1-byte alignment) and use the typed API.
-                let floats: Vec<f32> = bytes
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
+                // PrimitiveType, corrupting the dtype. The decode-once f32
+                // view (also fixes the blob's 1-byte alignment) feeds the
+                // typed API without per-call decoding.
+                let floats = self.param_f32(p)?;
                 client
-                    .buffer_from_host_buffer::<f32>(&floats, &p.shape, None)
+                    .buffer_from_host_buffer::<f32>(floats, &p.shape, None)
                     .map_err(|e| anyhow::anyhow!("buffer for {}: {e:?}", p.name))
             })
             .collect()
@@ -140,6 +181,37 @@ mod tests {
     fn rejects_out_of_bounds() {
         let ws = WeightStore::from_bytes(vec![0; 8]);
         assert!(ws.param_bytes(&entry(4, &[2])).is_err());
+        assert!(ws.param_f32(&entry(4, &[2])).is_err());
+    }
+
+    #[test]
+    fn f32_view_matches_bytes() {
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0, 7.0, -8.5];
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let ws = WeightStore::from_bytes(bytes);
+        assert_eq!(ws.as_f32(), &vals[..]);
+        let p = entry(8, &[2, 2]);
+        assert_eq!(ws.param_f32(&p).unwrap(), &vals[2..6]);
+    }
+
+    #[test]
+    fn decode_is_shared_across_clones() {
+        let ws = WeightStore::from_bytes(vec![0u8; 16]);
+        let view = ws.as_f32().as_ptr();
+        let clone = ws.clone();
+        // The clone must see the same decoded allocation, not re-decode.
+        assert_eq!(clone.as_f32().as_ptr(), view);
+    }
+
+    #[test]
+    fn rejects_misaligned_param() {
+        let ws = WeightStore::from_bytes(vec![0u8; 16]);
+        let mut p = entry(0, &[2]);
+        p.offset_bytes = 2; // not a multiple of 4
+        assert!(ws.param_f32(&p).is_err());
     }
 
     #[test]

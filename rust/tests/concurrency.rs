@@ -1,0 +1,201 @@
+//! Concurrency coverage for the perf layer: parallel bring-up equivalence,
+//! weight-buffer cache behaviour across repartitions, overlapped frame
+//! execution, and state-machine safety under racing switches.
+//!
+//! Artifact-backed tests skip (like the other integration suites) when
+//! `make artifacts` has not run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use neukonfig::coordinator::experiments::ExperimentSetup;
+use neukonfig::coordinator::{PipelinedRunner, Placement, PipelineState};
+use neukonfig::device::FrameSource;
+use neukonfig::models::{default_artifacts_dir, ArtifactIndex};
+use neukonfig::runtime::{literal_from_f32, BuildOptions, ChainExecutor, Domain, WeightStore};
+
+const MODEL: &str = "mobilenetv2";
+
+fn artifacts() -> Option<ArtifactIndex> {
+    ArtifactIndex::load(default_artifacts_dir()).ok()
+}
+
+fn setup() -> Option<ExperimentSetup> {
+    ExperimentSetup::load().ok()
+}
+
+/// Parallel bring-up must be a pure wall-clock optimisation: same chain,
+/// same outputs, same bookkeeping totals as the serial path.
+#[test]
+fn parallel_build_matches_serial() {
+    let Some(index) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = index.model(MODEL).unwrap();
+    let weights = WeightStore::load(&manifest).unwrap();
+    let n = manifest.num_layers();
+
+    let serial = ChainExecutor::build_with(
+        Domain::new("serial", 1.0).unwrap(),
+        &manifest,
+        0..n,
+        &weights,
+        BuildOptions::serial(true),
+    )
+    .unwrap();
+    let parallel = ChainExecutor::build_with(
+        Domain::new("parallel", 1.0).unwrap(),
+        &manifest,
+        0..n,
+        &weights,
+        BuildOptions::parallel(true),
+    )
+    .unwrap();
+
+    assert_eq!(serial.build_stats.num_layers, n);
+    assert_eq!(parallel.build_stats.num_layers, n);
+    // Fresh domains: every layer is a cache miss on both paths.
+    assert_eq!(parallel.build_stats.weight_cache_misses as usize, n);
+    assert_eq!(parallel.build_stats.weight_cache_hits, 0);
+
+    let numel: usize = manifest.input_shape.iter().product();
+    let input = literal_from_f32(&manifest.input_shape, &vec![0.3f32; numel]).unwrap();
+    let a = serial.run_raw(&input).unwrap().to_vec::<f32>().unwrap();
+    let b = parallel.run_raw(&input).unwrap().to_vec::<f32>().unwrap();
+    assert_eq!(a, b, "parallel bring-up changed the chain's outputs");
+}
+
+/// After `warm_executables`, a repartition to any split must hit the
+/// weight-buffer cache on every layer — near-zero `weights_upload`.
+#[test]
+fn weight_cache_hits_across_repartition() {
+    let Some(setup) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+
+    env.warm_executables().unwrap();
+    assert_eq!(env.edge.weight_cache_len(), n);
+    assert_eq!(env.cloud.weight_cache_len(), n);
+    env.edge.reset_weight_cache_stats();
+    env.cloud.reset_weight_cache_stats();
+
+    // "Repartition" to an arbitrary split: all n layer stagings must hit.
+    let p = env.build_pipeline(n / 3, Placement::NewContainers).unwrap();
+    assert_eq!(p.init_stats.weight_cache_misses, 0, "warm cache must not miss");
+    assert_eq!(p.init_stats.weight_cache_hits as usize, n);
+    // Cache hits are hashmap lookups, not uploads.
+    assert!(
+        p.init_stats.weights_upload_cpu < Duration::from_millis(50),
+        "cached staging should be ~zero, got {:?}",
+        p.init_stats.weights_upload_cpu
+    );
+
+    // The naive-baseline invalidation path starts over from cold.
+    env.edge.clear_cache();
+    env.cloud.clear_cache();
+    assert_eq!(env.edge.weight_cache_len(), 0);
+    assert_eq!(env.cloud.weight_cache_len(), 0);
+    env.edge.reset_weight_cache_stats();
+    env.cloud.reset_weight_cache_stats();
+    let p2 = env.build_pipeline(n / 2, Placement::NewContainers).unwrap();
+    assert_eq!(p2.init_stats.weight_cache_hits, 0);
+    assert_eq!(p2.init_stats.weight_cache_misses as usize, n);
+}
+
+/// The overlapped runner must preserve frame order and produce outputs
+/// identical to sequential `Pipeline::infer`.
+#[test]
+fn pipelined_runner_matches_sequential() {
+    let Some(setup) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    let p = env.build_pipeline(n / 2, Placement::NewContainers).unwrap();
+    p.transition(PipelineState::Active).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 11);
+    let frames: Vec<_> = (0..5)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+
+    let sequential: Vec<Vec<f32>> = frames
+        .iter()
+        .map(|f| p.infer(f).unwrap().output.to_vec::<f32>().unwrap())
+        .collect();
+
+    for depth in [1, 2, 4] {
+        let reports = PipelinedRunner::new(depth).run(&p, &frames).unwrap();
+        assert_eq!(reports.len(), frames.len());
+        for (i, (want, rep)) in sequential.iter().zip(&reports).enumerate() {
+            assert_eq!(
+                want,
+                &rep.output.to_vec::<f32>().unwrap(),
+                "depth {depth}: frame {i} out of order or corrupted"
+            );
+            assert!(rep.t_transfer >= env.cfg.network.latency);
+            assert!(rep.t_edge > Duration::ZERO);
+            assert!(rep.t_cloud > Duration::ZERO);
+        }
+    }
+}
+
+/// The runner honours the same traffic gate as `Pipeline::infer`.
+#[test]
+fn pipelined_runner_rejects_non_serving_pipeline() {
+    let Some(setup) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let p = env.build_pipeline(2, Placement::NewContainers).unwrap();
+    // Still Initialising — not serving.
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 1);
+    let frames = vec![env.frame_literal(&cam.frame(0)).unwrap()];
+    assert!(PipelinedRunner::default().run(&p, &frames).is_err());
+}
+
+/// Racing activations: exactly one of N concurrent `transition(Active)`
+/// calls may win; the rest must be rejected as illegal (Active -> Active
+/// is not a legal edge).
+#[test]
+fn concurrent_activation_has_single_winner() {
+    let Some(setup) = setup() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let p = Arc::new(env.build_pipeline(2, Placement::NewContainers).unwrap());
+    p.transition(PipelineState::Standby).unwrap();
+
+    let threads = 8;
+    let barrier = Arc::new(std::sync::Barrier::new(threads));
+    let wins: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let p = p.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    p.transition(PipelineState::Active).is_ok() as usize
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    assert_eq!(wins, 1, "exactly one racer may activate the pipeline");
+    assert_eq!(p.state(), PipelineState::Active);
+}
+
+/// Depth is clamped to at least one in-flight frame.
+#[test]
+fn runner_depth_floor() {
+    assert_eq!(PipelinedRunner::new(0).depth, 1);
+    assert_eq!(PipelinedRunner::new(3).depth, 3);
+    assert!(PipelinedRunner::default().depth >= 1);
+}
