@@ -144,6 +144,75 @@ pub fn write_json_baseline(
     std::fs::write(path, results_to_json(title, results))
 }
 
+/// One row of a baseline-vs-current comparison (the CI regression gate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowRegression {
+    pub name: String,
+    /// Mean of the committed baseline, seconds.
+    pub baseline_mean: f64,
+    /// Mean of the current run, seconds.
+    pub current_mean: f64,
+    /// `current / baseline` (1.0 = unchanged, 2.0 = twice as slow).
+    pub ratio: f64,
+    /// True when `ratio > 1 + tolerance`.
+    pub regressed: bool,
+}
+
+/// Diff two `BENCH_*.json` documents (the [`results_to_json`] format) on
+/// row means. Rows are matched by name; rows present in only one file are
+/// skipped — renamed or newly added benches must not fail the gate.
+/// `tolerance` is fractional: 0.15 flags rows more than 15% slower than
+/// the baseline. Returns every matched row (callers filter on
+/// `regressed`); errors only on malformed JSON.
+pub fn compare_baselines(
+    baseline_json: &str,
+    current_json: &str,
+    tolerance: f64,
+) -> anyhow::Result<Vec<RowRegression>> {
+    fn means(doc: &str) -> anyhow::Result<Vec<(String, f64)>> {
+        let v = crate::util::json::parse(doc)
+            .map_err(|e| anyhow::anyhow!("malformed bench JSON: {e:?}"))?;
+        let rows = v
+            .get("results")
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("bench JSON has no results array"))?;
+        rows.iter()
+            .map(|r| {
+                let name = r
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("bench row without a name"))?;
+                let mean = r
+                    .get("mean")
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("bench row {name} without a mean"))?;
+                Ok((name.to_string(), mean))
+            })
+            .collect()
+    }
+    let baseline = means(baseline_json)?;
+    let current = means(current_json)?;
+    let mut out = Vec::new();
+    for (name, baseline_mean) in baseline {
+        let Some((_, current_mean)) = current.iter().find(|(n, _)| *n == name) else {
+            continue;
+        };
+        let ratio = if baseline_mean > 0.0 {
+            current_mean / baseline_mean
+        } else {
+            1.0
+        };
+        out.push(RowRegression {
+            name,
+            baseline_mean,
+            current_mean: *current_mean,
+            ratio,
+            regressed: ratio > 1.0 + tolerance,
+        });
+    }
+    Ok(out)
+}
+
 /// Paper-vs-measured report printed by each bench binary.
 #[derive(Debug, Default)]
 pub struct Report {
@@ -230,6 +299,43 @@ mod tests {
         assert_eq!(results[0].get("name").as_str(), Some("op \"a\""));
         assert!((results[1].get("mean").as_f64().unwrap() - 0.02).abs() < 1e-9);
         assert_eq!(results[0].get("n").as_usize(), Some(3));
+    }
+
+    fn fixed(name: &str, ms: u64) -> BenchResult {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 2, max_time: Duration::from_secs(5) };
+        bench_measured(name, &cfg, || Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_tolerance() {
+        let base = results_to_json("t", &[fixed("a", 100), fixed("b", 100), fixed("c", 100)]);
+        // a: 10% slower (inside 15%), b: 30% slower (outside), c: faster.
+        let cur = results_to_json("t", &[fixed("a", 110), fixed("b", 130), fixed("c", 50)]);
+        let rows = compare_baselines(&base, &cur, 0.15).unwrap();
+        assert_eq!(rows.len(), 3);
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert!(!by_name("a").regressed);
+        assert!(by_name("b").regressed);
+        assert!((by_name("b").ratio - 1.3).abs() < 1e-9);
+        assert!(!by_name("c").regressed);
+    }
+
+    #[test]
+    fn compare_skips_unmatched_rows() {
+        // Renames/additions/removals never fail the gate.
+        let base = results_to_json("t", &[fixed("kept", 100), fixed("removed", 10)]);
+        let cur = results_to_json("t", &[fixed("kept", 100), fixed("added", 900)]);
+        let rows = compare_baselines(&base, &cur, 0.15).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].name, "kept");
+        assert!(!rows[0].regressed);
+    }
+
+    #[test]
+    fn compare_rejects_malformed_json() {
+        let good = results_to_json("t", &[fixed("a", 10)]);
+        assert!(compare_baselines("{oops", &good, 0.15).is_err());
+        assert!(compare_baselines(&good, "{\"no\": \"results\"}", 0.15).is_err());
     }
 
     #[test]

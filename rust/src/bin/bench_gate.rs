@@ -1,0 +1,75 @@
+//! CI bench regression gate.
+//!
+//! ```text
+//! bench_gate <baseline.json> <current.json> [tolerance]
+//! ```
+//!
+//! Compares two `BENCH_*.json` documents (the `results_to_json` format)
+//! row-by-row on mean time and exits non-zero if any row is more than
+//! `tolerance` (default 0.15 = 15%) slower than the committed baseline.
+//! Rows present in only one file — renamed or newly added benches — are
+//! ignored, so the gate only ever fails on a genuine regression.
+
+use neukonfig::bench::compare_baselines;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let (baseline_path, current_path) = match (args.get(1), args.get(2)) {
+        (Some(b), Some(c)) => (b.clone(), c.clone()),
+        _ => {
+            eprintln!("usage: bench_gate <baseline.json> <current.json> [tolerance]");
+            std::process::exit(2);
+        }
+    };
+    let tolerance: f64 = match args.get(3) {
+        Some(t) => t
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad tolerance {t:?}: {e}"))?,
+        None => 0.15,
+    };
+
+    let baseline = std::fs::read_to_string(&baseline_path)
+        .map_err(|e| anyhow::anyhow!("reading {baseline_path}: {e}"))?;
+    let current = std::fs::read_to_string(&current_path)
+        .map_err(|e| anyhow::anyhow!("reading {current_path}: {e}"))?;
+
+    let rows = compare_baselines(&baseline, &current, tolerance)?;
+    if rows.is_empty() {
+        println!("bench gate: no comparable rows (all renamed or first run) — pass");
+        return Ok(());
+    }
+
+    let mut regressions = 0usize;
+    println!(
+        "bench gate: {} comparable rows, tolerance {:.0}%",
+        rows.len(),
+        tolerance * 100.0
+    );
+    for r in &rows {
+        let verdict = if r.regressed {
+            regressions += 1;
+            "REGRESSED"
+        } else if r.ratio < 1.0 {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!(
+            "  {:<55} {:>12.6}s -> {:>12.6}s  ({:+6.1}%)  {}",
+            r.name,
+            r.baseline_mean,
+            r.current_mean,
+            (r.ratio - 1.0) * 100.0,
+            verdict
+        );
+    }
+    if regressions > 0 {
+        eprintln!(
+            "bench gate: {regressions} row(s) regressed more than {:.0}% vs baseline",
+            tolerance * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("bench gate: pass");
+    Ok(())
+}

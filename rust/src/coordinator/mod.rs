@@ -30,7 +30,7 @@ pub use pause_resume::PauseResume;
 pub use pipeline::{EdgeCloudEnv, InferenceReport, Pipeline, Placement};
 pub use planner::{PartitionPlan, Planner};
 pub use router::{RouteOutcome, Router};
-pub use runner::PipelinedRunner;
+pub use runner::{PipelinedRunner, StageMode};
 pub use server::{serve, ServeReport, ServerConfig, Strategy};
 pub use state::PipelineState;
 pub use switching::{PlacementCase, ScenarioA, ScenarioB};

@@ -69,6 +69,14 @@ pub struct InferenceReport {
     pub t_edge: Duration,
     pub t_transfer: Duration,
     pub t_cloud: Duration,
+    /// Per-layer execution times inside the edge chain, in chain order
+    /// (dilated like `t_edge`; layer j is manifest layer j). Empty for an
+    /// empty chain. Sums to <= `t_edge` — boundary upload/readback is
+    /// chain-level, not per-layer.
+    pub edge_per_layer: Vec<Duration>,
+    /// Per-layer execution times inside the cloud chain, in chain order
+    /// (layer j is manifest layer `split + j`).
+    pub cloud_per_layer: Vec<Duration>,
     pub output: Literal,
 }
 
@@ -139,8 +147,38 @@ impl Pipeline {
             t_edge: edge_t.total,
             t_transfer,
             t_cloud: cloud_t.total,
+            edge_per_layer: edge_t.per_layer,
+            cloud_per_layer: cloud_t.per_layer,
             output,
         })
+    }
+
+    /// Wire a pipeline directly from parts, with zeroed init stats, in the
+    /// `Initialising` state (callers `transition` it onward). This skips
+    /// `EdgeCloudEnv::build_pipeline`'s cost accounting and its boundary
+    /// validation — fault-injection tests use it to assemble deliberately
+    /// mismatched chains and watch the runner fail cleanly.
+    pub fn assemble(
+        split: usize,
+        edge_chain: ChainExecutor,
+        cloud_chain: ChainExecutor,
+        link: Arc<Link>,
+        clock: Clock,
+        edge_container: Arc<Container>,
+        cloud_container: Arc<Container>,
+    ) -> Pipeline {
+        Pipeline {
+            id: NEXT_PIPELINE_ID.fetch_add(1, Ordering::Relaxed),
+            split,
+            edge_chain,
+            cloud_chain,
+            link,
+            clock,
+            edge_container,
+            cloud_container,
+            init_stats: InitStats::default(),
+            state: Mutex::new(PipelineState::Initialising),
+        }
     }
 
     /// Memory currently attributed to this pipeline's containers on the

@@ -115,6 +115,12 @@ impl Router {
         Ok(out)
     }
 
+    /// [`Self::route_batch`] with the default runner: three-stage overlap
+    /// (edge | transfer | cloud) at [`DEFAULT_DEPTH`](super::runner::DEFAULT_DEPTH).
+    pub fn route_burst(&self, frames: &[Literal]) -> Result<Vec<RouteOutcome>> {
+        self.route_batch(frames, PipelinedRunner::default())
+    }
+
     /// Atomically redirect traffic to `new` (Dynamic Switching's
     /// `t_switch`). The old pipeline is moved to Draining and returned so
     /// the strategy can retire or recycle it. Returns the measured switch

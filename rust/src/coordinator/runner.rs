@@ -1,17 +1,27 @@
-//! Overlapped frame execution: edge compute of frame N+1 runs concurrently
-//! with the transfer + cloud compute of frame N.
+//! Overlapped frame execution: the edge compute, link transfer, and cloud
+//! compute stages of consecutive frames run concurrently.
 //!
 //! Sequential `Pipeline::infer` leaves the edge idle while a frame is on
 //! the wire or in the cloud — the classic pipeline bubble. The runner
-//! splits each frame at the partition boundary: a producer thread runs the
-//! edge chain and hands intermediates through a *bounded* channel to the
-//! consumer, which does transfer + cloud. Back-pressure (the channel
-//! depth) bounds in-flight frames so edge memory stays flat.
+//! splits each frame at the partition boundary and runs the stages on
+//! their own threads over *bounded* channels:
+//!
+//! * [`StageMode::Two`] — the original overlap: a producer thread runs the
+//!   edge chain and hands intermediates to the consumer, which does
+//!   transfer + cloud. Edge(N+1) overlaps transfer(N) + cloud(N).
+//! * [`StageMode::Three`] (default) — transfer gets its own stage, so the
+//!   link transfer of frame N overlaps *both* edge(N+1) and cloud(N−1).
+//!   On a transfer-bound configuration this lifts throughput to
+//!   `1 / max(t_edge, t_transfer, t_cloud)` instead of
+//!   `1 / (t_transfer + t_cloud)`.
+//!
+//! Back-pressure (the channel depth) bounds in-flight frames per hand-off
+//! so edge memory stays flat.
 //!
 //! Ordering and timing semantics are preserved exactly:
-//! * frames are produced, shipped, and consumed strictly in order — a
-//!   single producer and single consumer over a FIFO channel, so the
-//!   returned [`InferenceReport`]s are in frame order;
+//! * frames are produced, shipped, and consumed strictly in order — one
+//!   thread per stage over FIFO channels, so the returned
+//!   [`InferenceReport`]s are in frame order;
 //! * every report component keeps its own authority (chain-reported
 //!   dilated times, [`Link::transfer`]'s returned cost), identical to the
 //!   sequential path, so per-frame numbers match `infer` while wall-clock
@@ -19,41 +29,73 @@
 //! * `cpu_scale` dilation still lands on the shared [`Clock`]: each
 //!   chain's dilation surplus is injected exactly once per frame, same as
 //!   sequential execution. Only real elapsed time overlaps.
+//!
+//! Failure semantics: a stage error is forwarded downstream (tagged with
+//! the originating stage and frame index) and every stage drains cleanly —
+//! dropping a receiver fails the upstream `send`, which stops that stage,
+//! so no thread ever blocks on a dead peer and no out-of-order or partial
+//! report is returned.
+//!
+//! [`Link::transfer`]: crate::netsim::Link::transfer
+//! [`Clock`]: crate::clock::Clock
 
 use std::sync::mpsc::sync_channel;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use xla::Literal;
 
 use crate::runtime::ChainTiming;
 
 use super::pipeline::{InferenceReport, Pipeline};
 
-/// Default number of in-flight intermediates between edge and cloud.
+/// Default number of in-flight intermediates per stage hand-off.
 pub const DEFAULT_DEPTH: usize = 2;
 
-/// Two-stage overlapped executor over one [`Pipeline`].
+/// How many pipeline stages run on their own threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageMode {
+    /// Edge producer + (transfer, cloud) consumer — the original overlap.
+    Two,
+    /// Edge, transfer, and cloud each on their own stage.
+    Three,
+}
+
+/// Overlapped executor over one [`Pipeline`].
 #[derive(Debug, Clone, Copy)]
 pub struct PipelinedRunner {
-    /// Bounded-channel capacity: how many edge outputs may be in flight
-    /// before the edge stalls (1 = lock-step, still overlaps one frame).
+    /// Bounded-channel capacity per hand-off: how many outputs may be in
+    /// flight before the upstream stage stalls (1 = lock-step, still
+    /// overlaps one frame per hand-off).
     pub depth: usize,
+    /// Two-stage (edge | transfer+cloud) or three-stage
+    /// (edge | transfer | cloud) execution.
+    pub stages: StageMode,
 }
 
 impl Default for PipelinedRunner {
     fn default() -> Self {
-        PipelinedRunner { depth: DEFAULT_DEPTH }
+        PipelinedRunner { depth: DEFAULT_DEPTH, stages: StageMode::Three }
     }
 }
 
+/// Frame-indexed hand-off between stages.
+type Staged<T> = (usize, Result<T>);
+
 impl PipelinedRunner {
+    /// Three-stage runner (the default) at the given depth.
     pub fn new(depth: usize) -> Self {
-        PipelinedRunner { depth: depth.max(1) }
+        PipelinedRunner { depth: depth.max(1), stages: StageMode::Three }
     }
 
-    /// Run `frames` through `pipeline` with edge/cloud overlap, returning
-    /// one report per frame in frame order. Fails (like
-    /// [`Pipeline::infer`]) if the pipeline is not serving traffic.
+    /// Two-stage runner — the original overlap, kept for the ablation
+    /// benches and as a fallback when thread budget is tight.
+    pub fn two_stage(depth: usize) -> Self {
+        PipelinedRunner { depth: depth.max(1), stages: StageMode::Two }
+    }
+
+    /// Run `frames` through `pipeline` with stage overlap, returning one
+    /// report per frame in frame order. Fails (like [`Pipeline::infer`])
+    /// if the pipeline is not serving traffic.
     pub fn run(&self, pipeline: &Pipeline, frames: &[Literal]) -> Result<Vec<InferenceReport>> {
         if !pipeline.state().serves_traffic() {
             bail!(
@@ -74,52 +116,195 @@ impl PipelinedRunner {
         if frames.is_empty() {
             return Ok(Vec::new());
         }
-        let (tx, rx) = sync_channel::<Result<(Literal, ChainTiming)>>(self.depth);
+        match self.stages {
+            StageMode::Two => self.run_two_stage(pipeline, frames),
+            StageMode::Three => self.run_three_stage(pipeline, frames),
+        }
+    }
+
+    fn run_two_stage(
+        &self,
+        pipeline: &Pipeline,
+        frames: &[Literal],
+    ) -> Result<Vec<InferenceReport>> {
+        let (tx, rx) = sync_channel::<Staged<(Literal, ChainTiming)>>(self.depth);
         let mut reports = Vec::with_capacity(frames.len());
 
-        std::thread::scope(|s| -> Result<()> {
+        let edge_progress = std::thread::scope(|s| -> Result<usize> {
             let producer = s.spawn(move || {
-                for frame in frames {
-                    let staged = pipeline.edge_chain.run(frame, &pipeline.clock);
+                for (i, frame) in frames.iter().enumerate() {
+                    let staged = pipeline
+                        .edge_chain
+                        .run(frame, &pipeline.clock)
+                        .with_context(|| format!("edge stage failed at frame {i}"));
                     let failed = staged.is_err();
                     // A send error means the consumer hung up (it hit its
                     // own error and dropped `rx`) — stop producing.
-                    if tx.send(staged).is_err() || failed {
-                        break;
+                    if tx.send((i, staged)).is_err() || failed {
+                        return i;
                     }
                 }
+                frames.len()
             });
 
             for _ in 0..frames.len() {
-                let (intermediate, edge_t) = match rx.recv() {
-                    Ok(staged) => staged?,
-                    // Producer hung up early: it already sent the error we
-                    // consumed (or panicked, caught at join below).
+                let (i, staged) = match rx.recv() {
+                    Ok(handoff) => handoff,
+                    // Producer hung up without delivering an error we could
+                    // consume (it panicked, caught at join below) — stop
+                    // consuming; the caller's length check attributes it.
                     Err(_) => break,
                 };
+                let (intermediate, edge_t) = staged?;
                 let t_transfer = pipeline.link.transfer(intermediate.size_bytes());
-                let (output, cloud_t) = pipeline.cloud_chain.run(&intermediate, &pipeline.clock)?;
-                reports.push(InferenceReport {
-                    t_edge: edge_t.total,
-                    t_transfer,
-                    t_cloud: cloud_t.total,
-                    output,
-                });
+                let (output, cloud_t) = pipeline
+                    .cloud_chain
+                    .run(&intermediate, &pipeline.clock)
+                    .with_context(|| format!("cloud stage failed at frame {i}"))?;
+                reports.push(report(edge_t, t_transfer, cloud_t, output));
             }
             drop(rx);
-            producer
-                .join()
-                .map_err(|_| anyhow!("edge stage panicked"))?;
-            Ok(())
+            producer.join().map_err(|_| anyhow!("edge stage panicked"))
         })?;
 
-        if reports.len() != frames.len() {
-            bail!(
-                "pipelined run produced {} of {} reports",
-                reports.len(),
-                frames.len()
-            );
-        }
+        check_complete(reports.len(), frames.len(), &[("edge", edge_progress)])?;
         Ok(reports)
+    }
+
+    fn run_three_stage(
+        &self,
+        pipeline: &Pipeline,
+        frames: &[Literal],
+    ) -> Result<Vec<InferenceReport>> {
+        let (edge_tx, edge_rx) = sync_channel::<Staged<(Literal, ChainTiming)>>(self.depth);
+        let (link_tx, link_rx) =
+            sync_channel::<Staged<(Literal, ChainTiming, std::time::Duration)>>(self.depth);
+        let mut reports = Vec::with_capacity(frames.len());
+
+        let (edge_progress, transfer_progress) =
+            std::thread::scope(|s| -> Result<(usize, usize)> {
+                let edge = s.spawn(move || {
+                    for (i, frame) in frames.iter().enumerate() {
+                        let staged = pipeline
+                            .edge_chain
+                            .run(frame, &pipeline.clock)
+                            .with_context(|| format!("edge stage failed at frame {i}"));
+                        let failed = staged.is_err();
+                        if edge_tx.send((i, staged)).is_err() || failed {
+                            return i;
+                        }
+                    }
+                    frames.len()
+                });
+
+                let transfer = s.spawn(move || {
+                    let mut shipped = 0usize;
+                    while let Ok((i, staged)) = edge_rx.recv() {
+                        // Forward upstream errors untouched; ship the
+                        // intermediate over the FIFO link otherwise. The
+                        // link keeps its own timing authority (queueing +
+                        // serialisation), exactly as in the 2-stage path.
+                        let handoff = staged.map(|(intermediate, edge_t)| {
+                            let t_transfer =
+                                pipeline.link.transfer(intermediate.size_bytes());
+                            (intermediate, edge_t, t_transfer)
+                        });
+                        let failed = handoff.is_err();
+                        if link_tx.send((i, handoff)).is_err() || failed {
+                            return shipped;
+                        }
+                        shipped = i + 1;
+                    }
+                    shipped
+                });
+
+                for _ in 0..frames.len() {
+                    let (i, staged) = match link_rx.recv() {
+                        Ok(handoff) => handoff,
+                        Err(_) => break,
+                    };
+                    let (intermediate, edge_t, t_transfer) = staged?;
+                    let (output, cloud_t) = pipeline
+                        .cloud_chain
+                        .run(&intermediate, &pipeline.clock)
+                        .with_context(|| format!("cloud stage failed at frame {i}"))?;
+                    reports.push(report(edge_t, t_transfer, cloud_t, output));
+                }
+                drop(link_rx);
+                let edge_progress =
+                    edge.join().map_err(|_| anyhow!("edge stage panicked"))?;
+                let transfer_progress = transfer
+                    .join()
+                    .map_err(|_| anyhow!("transfer stage panicked"))?;
+                Ok((edge_progress, transfer_progress))
+            })?;
+
+        check_complete(
+            reports.len(),
+            frames.len(),
+            &[("edge", edge_progress), ("transfer", transfer_progress)],
+        )?;
+        Ok(reports)
+    }
+}
+
+fn report(
+    edge_t: ChainTiming,
+    t_transfer: std::time::Duration,
+    cloud_t: ChainTiming,
+    output: Literal,
+) -> InferenceReport {
+    InferenceReport {
+        t_edge: edge_t.total,
+        t_transfer,
+        t_cloud: cloud_t.total,
+        edge_per_layer: edge_t.per_layer,
+        cloud_per_layer: cloud_t.per_layer,
+        output,
+    }
+}
+
+/// Attribute a short run to the stage that stopped first: a hand-off
+/// channel closing without a consumable error used to surface as a bare
+/// "produced N of M reports" — now the message names the originating stage
+/// and the frame index it stopped at.
+fn check_complete(got: usize, want: usize, stages: &[(&str, usize)]) -> Result<()> {
+    if got == want {
+        return Ok(());
+    }
+    let culprit = stages
+        .iter()
+        .min_by_key(|(_, progress)| *progress)
+        .expect("at least one upstream stage");
+    bail!(
+        "pipelined run produced {got} of {want} reports: {} stage stopped at frame {} \
+         without delivering an error",
+        culprit.0,
+        culprit.1,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_floor_and_modes() {
+        assert_eq!(PipelinedRunner::new(0).depth, 1);
+        assert_eq!(PipelinedRunner::new(0).stages, StageMode::Three);
+        assert_eq!(PipelinedRunner::two_stage(0).depth, 1);
+        assert_eq!(PipelinedRunner::two_stage(5).stages, StageMode::Two);
+        let d = PipelinedRunner::default();
+        assert_eq!(d.depth, DEFAULT_DEPTH);
+        assert_eq!(d.stages, StageMode::Three);
+    }
+
+    #[test]
+    fn short_run_names_slowest_stage_and_frame() {
+        let err = check_complete(3, 8, &[("edge", 6), ("transfer", 3)]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("3 of 8"), "got: {msg}");
+        assert!(msg.contains("transfer stage stopped at frame 3"), "got: {msg}");
+        assert!(check_complete(8, 8, &[("edge", 8)]).is_ok());
     }
 }

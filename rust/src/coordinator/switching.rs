@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
+use xla::Literal;
 
 use crate::metrics::DowntimeRecord;
 
@@ -198,6 +199,29 @@ impl ScenarioB {
             self.env.edge_host.stop(&old.edge_container);
             self.env.cloud_host.stop(&old.cloud_container);
         }
+        Ok(rec)
+    }
+
+    /// [`Self::repartition`], then run one probe frame on the new active
+    /// pipeline and append its per-layer timings to the record as
+    /// `edge/layerN` / `cloud/layerN` phases. The probe runs *after* the
+    /// switch (outside the downtime window — `total` is unchanged), so the
+    /// record answers both "how long was the switch" and "where does
+    /// steady-state time go at the new split" in one artifact, feeding
+    /// [`ModelProfile::apply_observation`].
+    ///
+    /// [`ModelProfile::apply_observation`]:
+    /// crate::profiler::ModelProfile::apply_observation
+    pub fn repartition_probed(
+        &self,
+        new_split: usize,
+        probe: &Literal,
+    ) -> Result<DowntimeRecord> {
+        let mut rec = self.repartition(new_split)?;
+        let active = self.router.active();
+        let report = active.infer(probe).context("probe frame after switch")?;
+        rec.push_layer_phases("edge", 0, &report.edge_per_layer);
+        rec.push_layer_phases("cloud", active.split, &report.cloud_per_layer);
         Ok(rec)
     }
 }

@@ -33,6 +33,32 @@ impl DowntimeRecord {
     pub fn push_phase(&mut self, name: impl Into<String>, d: Duration) {
         self.phases.push((name.into(), d));
     }
+
+    /// Record a chain's per-layer timings as one phase per layer, named
+    /// `"<stage>/layer<manifest index>"` — e.g. a cloud chain starting at
+    /// split 3 records `cloud/layer3`, `cloud/layer4`, ... Keeps the flat
+    /// `(name, duration)` shape so existing report renderers show them
+    /// unchanged.
+    pub fn push_layer_phases(
+        &mut self,
+        stage: &str,
+        first_layer: usize,
+        per_layer: &[Duration],
+    ) {
+        for (j, d) in per_layer.iter().enumerate() {
+            self.phases.push((format!("{stage}/layer{}", first_layer + j), *d));
+        }
+    }
+
+    /// Sum of every phase whose name starts with `prefix` (e.g.
+    /// `"cloud/"` totals the cloud chain's per-layer phases).
+    pub fn phase_prefix_total(&self, prefix: &str) -> Duration {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, d)| *d)
+            .sum()
+    }
 }
 
 /// Frame accounting over an experiment run.
@@ -232,6 +258,28 @@ mod tests {
         assert_eq!(d.real(), Duration::from_millis(400));
         assert_eq!(d.phase("pause"), Some(Duration::from_millis(300)));
         assert_eq!(d.phase("nope"), None);
+    }
+
+    #[test]
+    fn layer_phases_named_by_manifest_index() {
+        let mut d = DowntimeRecord::default();
+        d.push_layer_phases(
+            "edge",
+            0,
+            &[Duration::from_millis(2), Duration::from_millis(3)],
+        );
+        d.push_layer_phases(
+            "cloud",
+            2,
+            &[Duration::from_millis(5), Duration::from_millis(7)],
+        );
+        assert_eq!(d.phase("edge/layer0"), Some(Duration::from_millis(2)));
+        assert_eq!(d.phase("edge/layer1"), Some(Duration::from_millis(3)));
+        assert_eq!(d.phase("cloud/layer2"), Some(Duration::from_millis(5)));
+        assert_eq!(d.phase("cloud/layer3"), Some(Duration::from_millis(7)));
+        assert_eq!(d.phase_prefix_total("edge/"), Duration::from_millis(5));
+        assert_eq!(d.phase_prefix_total("cloud/"), Duration::from_millis(12));
+        assert_eq!(d.phase_prefix_total("nope/"), Duration::ZERO);
     }
 
     #[test]

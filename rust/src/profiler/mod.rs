@@ -109,6 +109,37 @@ impl ModelProfile {
             .unwrap()
     }
 
+    /// Fold one frame's observed per-layer timings back into the profile:
+    /// `edge_per_layer`/`cloud_per_layer` straight from an
+    /// [`InferenceReport`] taken at split `split` (edge entry j is manifest
+    /// layer j; cloud entry j is layer `split + j`). Each covered layer's
+    /// estimate moves to the midpoint of old and observed — an equal-weight
+    /// blend, so one noisy frame can't wipe out the analytic prior and
+    /// repeated observations converge on the measured value. Entries past
+    /// the profile tail are ignored. Returns how many layer estimates were
+    /// updated.
+    ///
+    /// [`InferenceReport`]: crate::coordinator::InferenceReport
+    pub fn apply_observation(
+        &mut self,
+        split: usize,
+        edge_per_layer: &[Duration],
+        cloud_per_layer: &[Duration],
+    ) -> usize {
+        let mut updated = 0;
+        for (j, d) in edge_per_layer.iter().enumerate().take(split.min(self.layers.len())) {
+            let t = &mut self.layers[j].edge_time;
+            *t = (*t + *d) / 2;
+            updated += 1;
+        }
+        for (j, d) in cloud_per_layer.iter().enumerate() {
+            let Some(layer) = self.layers.get_mut(split + j) else { break };
+            layer.cloud_time = (layer.cloud_time + *d) / 2;
+            updated += 1;
+        }
+        updated
+    }
+
     /// All split breakdowns — the rows of Fig 2 / Fig 3.
     pub fn sweep(
         &self,
@@ -269,6 +300,42 @@ mod tests {
         let opt = p.optimal_split(20.0, Duration::from_millis(20), 1.0);
         let min = rows.iter().min_by_key(|b| b.total()).unwrap();
         assert_eq!(min.split, opt);
+    }
+
+    #[test]
+    fn observation_blends_toward_measured() {
+        let mut p = cnn_like();
+        // Split 2: edge covers layers 0..2, cloud covers 2..10. Observe the
+        // edge twice as slow and the first cloud layer twice as fast.
+        let edge_obs = vec![Duration::from_millis(60), Duration::from_millis(60)];
+        let cloud_obs = vec![Duration::from_millis(3)];
+        let updated = p.apply_observation(2, &edge_obs, &cloud_obs);
+        assert_eq!(updated, 3);
+        // Midpoint of 30 ms prior and 60 ms observed.
+        assert_eq!(p.layers[0].edge_time, Duration::from_millis(45));
+        assert_eq!(p.layers[1].edge_time, Duration::from_millis(45));
+        // cloud_time prior for layer 2 is 30/5 = 6 ms; midpoint with 3 ms.
+        assert_eq!(p.layers[2].cloud_time, Duration::from_micros(4500));
+        // Untouched layers keep their priors.
+        assert_eq!(p.layers[3].cloud_time, Duration::from_millis(6));
+        // Converges on the measured value with repetition.
+        for _ in 0..20 {
+            p.apply_observation(2, &edge_obs, &cloud_obs);
+        }
+        let got = p.layers[0].edge_time;
+        let want = Duration::from_millis(60);
+        let err = got.max(want) - got.min(want);
+        assert!(err < Duration::from_micros(100), "did not converge: {err:?}");
+    }
+
+    #[test]
+    fn observation_ignores_overlong_tails() {
+        let mut p = cnn_like();
+        // 12 edge entries against a 10-layer profile at split 10, and cloud
+        // entries starting past the tail: out-of-range entries are dropped.
+        let long = vec![Duration::from_millis(1); 12];
+        assert_eq!(p.apply_observation(10, &long, &long), 10);
+        assert_eq!(p.apply_observation(10, &[], &long), 0);
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub struct BuildOptions {
     pub parallel: bool,
     /// Worker-pool size; 0 = min(available parallelism, layer count).
     pub max_workers: usize,
+    /// Byte budget (in MiB) applied to the domain's weight-buffer cache
+    /// before this build. `None` leaves the domain's current budget —
+    /// which defaults from `NEUKONFIG_WEIGHT_CACHE_MB` — untouched. The
+    /// budget is the paper's memory-vs-downtime trade-off as a knob: a
+    /// smaller cache means lower steady-state edge memory, but repartitions
+    /// re-pay weight uploads for evicted layers.
+    pub weight_cache_mb: Option<f64>,
 }
 
 impl Default for BuildOptions {
@@ -47,17 +54,18 @@ impl Default for BuildOptions {
             use_cache: true,
             parallel: default_parallel_bringup(),
             max_workers: 0,
+            weight_cache_mb: None,
         }
     }
 }
 
 impl BuildOptions {
     pub fn serial(use_cache: bool) -> Self {
-        BuildOptions { use_cache, parallel: false, max_workers: 0 }
+        BuildOptions { use_cache, parallel: false, ..Self::default() }
     }
 
     pub fn parallel(use_cache: bool) -> Self {
-        BuildOptions { use_cache, parallel: true, max_workers: 0 }
+        BuildOptions { use_cache, parallel: true, ..Self::default() }
     }
 }
 
@@ -65,6 +73,22 @@ impl BuildOptions {
 /// (ablation knob; also the escape hatch for single-core CI runners).
 pub fn default_parallel_bringup() -> bool {
     std::env::var("NEUKONFIG_SERIAL_BRINGUP").as_deref() != Ok("1")
+}
+
+/// Default weight-cache byte budget from `NEUKONFIG_WEIGHT_CACHE_MB`
+/// (unset, unparsable, or <= 0 means unbounded — the pre-eviction
+/// behaviour).
+pub fn default_weight_cache_mb() -> Option<f64> {
+    parse_weight_cache_mb(std::env::var("NEUKONFIG_WEIGHT_CACHE_MB").ok().as_deref())
+}
+
+fn parse_weight_cache_mb(raw: Option<&str>) -> Option<f64> {
+    raw.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|mb| *mb > 0.0)
+}
+
+fn mb_to_bytes(mb: f64) -> u64 {
+    (mb * 1024.0 * 1024.0) as u64
 }
 
 fn effective_workers(max_workers: usize, jobs: usize) -> usize {
@@ -97,10 +121,118 @@ pub struct Domain {
     /// `exe_cache`: once a layer's parameters are device buffers on this
     /// domain, a repartition to any split re-uses them instead of
     /// re-decoding bytes and re-uploading — `weights_upload` in the
-    /// Dynamic Switching path drops to near zero.
-    weight_cache: Mutex<HashMap<(usize, String), Arc<Vec<PjRtBuffer>>>>,
-    weight_hits: AtomicU64,
-    weight_misses: AtomicU64,
+    /// Dynamic Switching path drops to near zero. Byte-budgeted with LRU
+    /// eviction for memory-constrained edges (see [`WeightCacheStats`]).
+    weight_cache: Mutex<WeightCache>,
+}
+
+/// Counters + occupancy of a domain's weight-buffer cache.
+///
+/// Between stat resets with no intervening `clear_weight_cache`/
+/// `clear_cache`, the books reconcile as
+/// `misses == entries + evictions` (every miss inserts an entry that is
+/// either still resident or was evicted by the budget) and
+/// `hits + misses == total staging lookups`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WeightCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Resident entries right now.
+    pub entries: u64,
+    /// Resident staged-weight bytes right now.
+    pub bytes: u64,
+}
+
+/// One staged layer in the weight cache.
+struct WeightEntry {
+    bufs: Arc<Vec<PjRtBuffer>>,
+    bytes: u64,
+    /// Monotone LRU stamp (strictly increasing — ties are impossible, so
+    /// the victim order is deterministic).
+    last_used: u64,
+}
+
+/// Byte-budgeted LRU over staged weight buffers. Evicting an entry only
+/// drops the cache's `Arc`; chains already holding the buffers keep them
+/// alive, so eviction is always safe mid-flight.
+#[derive(Default)]
+struct WeightCache {
+    entries: HashMap<(usize, String), WeightEntry>,
+    /// `None` = unbounded (the pre-eviction behaviour).
+    budget_bytes: Option<u64>,
+    bytes: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl WeightCache {
+    fn get(&mut self, key: &(usize, String)) -> Option<Arc<Vec<PjRtBuffer>>> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits += 1;
+                Some(e.bufs.clone())
+            }
+            None => None,
+        }
+    }
+
+    fn insert(&mut self, key: (usize, String), bufs: Arc<Vec<PjRtBuffer>>, bytes: u64) {
+        self.misses += 1;
+        self.tick += 1;
+        self.bytes += bytes;
+        if let Some(old) = self.entries.insert(
+            key,
+            WeightEntry { bufs, bytes, last_used: self.tick },
+        ) {
+            // Two builds raced on the same layer: the replaced duplicate is
+            // not an eviction, just double-staged work.
+            self.bytes -= old.bytes;
+        }
+        self.enforce_budget();
+    }
+
+    /// Evict least-recently-used entries until the cache fits its budget.
+    /// An entry larger than the whole budget cannot stay resident either —
+    /// the loop drains down to an empty cache if need be, so `bytes` never
+    /// exceeds `budget_bytes` on return.
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.budget_bytes else {
+            return;
+        };
+        while self.bytes > budget && !self.entries.is_empty() {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty cache has an LRU victim");
+            if let Some(e) = self.entries.remove(&victim) {
+                self.bytes -= e.bytes;
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.bytes = 0;
+    }
+
+    fn stats(&self) -> WeightCacheStats {
+        WeightCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len() as u64,
+            bytes: self.bytes,
+        }
+    }
 }
 
 impl Domain {
@@ -111,9 +243,10 @@ impl Domain {
             client,
             cpu_scale_bits: AtomicU64::new(cpu_scale.to_bits()),
             exe_cache: Mutex::new(HashMap::new()),
-            weight_cache: Mutex::new(HashMap::new()),
-            weight_hits: AtomicU64::new(0),
-            weight_misses: AtomicU64::new(0),
+            weight_cache: Mutex::new(WeightCache {
+                budget_bytes: default_weight_cache_mb().map(mb_to_bytes),
+                ..WeightCache::default()
+            }),
         }))
     }
 
@@ -158,7 +291,9 @@ impl Domain {
     /// Stage one layer's parameters as device buffers, through the
     /// per-domain weight cache. Returns the buffers and whether this was a
     /// cache hit. With `use_cache = false` the cache is neither read nor
-    /// populated (the naive-baseline path).
+    /// populated (the naive-baseline path). The upload itself runs outside
+    /// the cache lock; on a miss the staged entry is inserted afterwards
+    /// and the byte budget enforced (LRU eviction).
     pub fn layer_weight_buffers(
         &self,
         weights: &WeightStore,
@@ -168,14 +303,13 @@ impl Domain {
         let key = (layer.index, layer.name.clone());
         if use_cache {
             if let Some(bufs) = self.weight_cache.lock().unwrap().get(&key) {
-                self.weight_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((bufs.clone(), true));
+                return Ok((bufs, true));
             }
         }
         let bufs = Arc::new(weights.layer_buffers(&self.client, layer)?);
         if use_cache {
-            self.weight_misses.fetch_add(1, Ordering::Relaxed);
-            self.weight_cache.lock().unwrap().insert(key, bufs.clone());
+            let bytes = weights.layer_staged_bytes(layer)? as u64;
+            self.weight_cache.lock().unwrap().insert(key, bufs.clone(), bytes);
         }
         Ok((bufs, false))
     }
@@ -185,21 +319,49 @@ impl Domain {
     }
 
     pub fn weight_cache_len(&self) -> usize {
-        self.weight_cache.lock().unwrap().len()
+        self.weight_cache.lock().unwrap().entries.len()
     }
 
-    /// (hits, misses) of the weight-buffer cache since construction (or the
-    /// last [`Self::reset_weight_cache_stats`]).
-    pub fn weight_cache_stats(&self) -> (u64, u64) {
-        (
-            self.weight_hits.load(Ordering::Relaxed),
-            self.weight_misses.load(Ordering::Relaxed),
-        )
+    /// Resident staged-weight bytes (always <= the budget when one is set).
+    pub fn weight_cache_bytes(&self) -> u64 {
+        self.weight_cache.lock().unwrap().bytes
+    }
+
+    /// Current byte budget (`None` = unbounded).
+    pub fn weight_cache_budget_bytes(&self) -> Option<u64> {
+        self.weight_cache.lock().unwrap().budget_bytes
+    }
+
+    /// Set (or lift, with `None`) the weight-cache byte budget. Shrinking
+    /// the budget evicts immediately — the memory knob takes effect without
+    /// waiting for the next staging.
+    pub fn set_weight_cache_budget_mb(&self, mb: Option<f64>) {
+        let mut cache = self.weight_cache.lock().unwrap();
+        cache.budget_bytes = mb.filter(|m| *m > 0.0).map(mb_to_bytes);
+        cache.enforce_budget();
+    }
+
+    /// Peek whether a layer is resident, without touching LRU order or the
+    /// hit/miss counters (test/observability hook).
+    pub fn weight_cache_contains(&self, index: usize, name: &str) -> bool {
+        self.weight_cache
+            .lock()
+            .unwrap()
+            .entries
+            .contains_key(&(index, name.to_string()))
+    }
+
+    /// Cache counters + occupancy since construction (or the last
+    /// [`Self::reset_weight_cache_stats`]).
+    pub fn weight_cache_stats(&self) -> WeightCacheStats {
+        self.weight_cache.lock().unwrap().stats()
     }
 
     pub fn reset_weight_cache_stats(&self) {
-        self.weight_hits.store(0, Ordering::Relaxed);
-        self.weight_misses.store(0, Ordering::Relaxed);
+        let mut cache = self.weight_cache.lock().unwrap();
+        cache.hits = 0;
+        cache.misses = 0;
+        cache.evictions = 0;
     }
 
     /// Drop every cached executable *and* staged weight buffer — the
@@ -210,7 +372,8 @@ impl Domain {
         self.weight_cache.lock().unwrap().clear();
     }
 
-    /// Drop only the staged weight buffers.
+    /// Drop only the staged weight buffers (zeroes occupancy; counters are
+    /// left for [`Self::reset_weight_cache_stats`]).
     pub fn clear_weight_cache(&self) {
         self.weight_cache.lock().unwrap().clear();
     }
@@ -299,7 +462,10 @@ impl LayerExec {
 pub struct ChainTiming {
     /// Total execution time on the experiment clock (dilated by cpu_scale).
     pub total: Duration,
-    /// Per-layer dilated times, aligned with the chain's layer range.
+    /// Per-layer dilated times, aligned with the chain's layer range
+    /// (`per_layer[j]` is unit `range.start + j`). Timestamps bracket each
+    /// unit's dispatch on the hot path — the chain-boundary host upload and
+    /// readback are excluded, so the sum is <= `total`.
     pub per_layer: Vec<Duration>,
 }
 
@@ -366,6 +532,11 @@ impl ChainExecutor {
         opts: BuildOptions,
     ) -> Result<Self> {
         anyhow::ensure!(range.end <= manifest.num_layers(), "range out of bounds");
+        if let Some(mb) = opts.weight_cache_mb {
+            // Explicit per-build override of the domain's cache budget
+            // (sticky — the domain keeps enforcing it afterwards).
+            domain.set_weight_cache_budget_mb(Some(mb));
+        }
         let t_build = Instant::now();
         let built = if opts.parallel && range.len() > 1 {
             Self::build_layers_parallel(&domain, manifest, range.clone(), weights, opts)?
@@ -509,32 +680,50 @@ impl ChainExecutor {
     /// upload, one readback). Real wall time is measured end-to-end; the
     /// difference implied by `cpu_scale` is injected on `clock` so stressed
     /// or slower domains take proportionally longer on the timeline.
+    /// [`ChainTiming::per_layer`] is filled from cheap per-unit timestamps
+    /// (two `Instant::now()` calls per unit — nanoseconds against PJRT
+    /// execution cost), dilated by the same `cpu_scale`.
     pub fn run(&self, input: &Literal, clock: &Clock) -> Result<(Literal, ChainTiming)> {
         let t0 = Instant::now();
-        let out = self.run_raw(input)?;
+        let (out, raw_per_layer) = self.run_raw_timed(input)?;
         let real = t0.elapsed();
         let scale = self.domain.cpu_scale().max(1e-3);
         let dilated = real.mul_f64(1.0 / scale);
         if dilated > real {
             clock.advance(dilated - real);
         }
-        Ok((out, ChainTiming { total: dilated, per_layer: Vec::new() }))
+        let per_layer = raw_per_layer
+            .into_iter()
+            .map(|d| d.mul_f64(1.0 / scale))
+            .collect();
+        Ok((out, ChainTiming { total: dilated, per_layer }))
     }
 
     /// Execute without timing dilation (profiling / warmup).
     pub fn run_raw(&self, input: &Literal) -> Result<Literal> {
+        Ok(self.run_raw_timed(input)?.0)
+    }
+
+    /// [`Self::run_raw`] plus the undilated per-unit times (one entry per
+    /// layer of this chain, in chain order).
+    pub fn run_raw_timed(&self, input: &Literal) -> Result<(Literal, Vec<Duration>)> {
         if self.layers.is_empty() {
-            return clone_literal(input);
+            return Ok((clone_literal(input)?, Vec::new()));
         }
         let client = self.domain.client();
         let mut buf = client
             .buffer_from_host_literal(None, input)
             .map_err(|e| anyhow!("chain input upload: {e:?}"))?;
+        let mut per_layer = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
+            let t = Instant::now();
             buf = layer.run_buf(&buf)?;
+            per_layer.push(t.elapsed());
         }
-        buf.to_literal_sync()
-            .map_err(|e| anyhow!("chain readback: {e:?}"))
+        let out = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("chain readback: {e:?}"))?;
+        Ok((out, per_layer))
     }
 
     pub fn layer(&self, i: usize) -> &LayerExec {
@@ -621,12 +810,59 @@ mod tests {
         let o = BuildOptions::default();
         assert!(o.use_cache);
         assert_eq!(o.max_workers, 0);
+        assert_eq!(o.weight_cache_mb, None);
         let s = BuildOptions::serial(false);
         assert!(!s.parallel);
         assert!(!s.use_cache);
         let p = BuildOptions::parallel(true);
         assert!(p.parallel);
         assert!(p.use_cache);
+        assert_eq!(p.weight_cache_mb, None);
+    }
+
+    #[test]
+    fn weight_cache_mb_parsing() {
+        assert_eq!(parse_weight_cache_mb(None), None);
+        assert_eq!(parse_weight_cache_mb(Some("")), None);
+        assert_eq!(parse_weight_cache_mb(Some("nope")), None);
+        assert_eq!(parse_weight_cache_mb(Some("0")), None);
+        assert_eq!(parse_weight_cache_mb(Some("-4")), None);
+        assert_eq!(parse_weight_cache_mb(Some("64")), Some(64.0));
+        assert_eq!(parse_weight_cache_mb(Some(" 2.5 ")), Some(2.5));
+        assert_eq!(mb_to_bytes(1.0), 1024 * 1024);
+        assert_eq!(mb_to_bytes(0.5), 512 * 1024);
+    }
+
+    #[test]
+    fn weight_cache_lru_bookkeeping() {
+        // Pure cache-policy test over empty buffer lists (no PJRT needed).
+        let mut c = WeightCache { budget_bytes: Some(100), ..WeightCache::default() };
+        let key = |i: usize| (i, format!("l{i}"));
+        let bufs = || Arc::new(Vec::new());
+        c.insert(key(0), bufs(), 40);
+        c.insert(key(1), bufs(), 40);
+        assert_eq!(c.bytes, 80);
+        // Touch 0 so 1 becomes the LRU victim.
+        assert!(c.get(&key(0)).is_some());
+        c.insert(key(2), bufs(), 40);
+        assert_eq!(c.bytes, 80);
+        assert!(c.entries.contains_key(&key(0)));
+        assert!(!c.entries.contains_key(&key(1)), "LRU victim must be 1");
+        assert!(c.entries.contains_key(&key(2)));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 3, 1));
+        assert_eq!(s.misses, s.entries + s.evictions, "books must reconcile");
+        // An entry bigger than the whole budget cannot stay resident.
+        c.insert(key(3), bufs(), 500);
+        assert_eq!(c.entries.len(), 0);
+        assert_eq!(c.bytes, 0);
+        // Duplicate insert (racing builds) replaces without double counting.
+        let mut d = WeightCache::default();
+        d.insert(key(7), bufs(), 10);
+        d.insert(key(7), bufs(), 10);
+        assert_eq!(d.bytes, 10);
+        assert_eq!(d.entries.len(), 1);
+        assert_eq!(d.stats().evictions, 0);
     }
 
     #[test]

@@ -125,6 +125,20 @@ impl WeightStore {
             .collect()
     }
 
+    /// Bytes one layer occupies once staged as device buffers (the unit of
+    /// account for the per-domain weight-cache byte budget). Validates the
+    /// parameter slices against the blob so a layer that could never stage
+    /// is also rejected here, keeping cache accounting and staging in
+    /// agreement.
+    pub fn layer_staged_bytes(&self, layer: &LayerManifest) -> Result<usize> {
+        let mut total = 0usize;
+        for p in &layer.params {
+            self.param_bytes(p)?;
+            total += p.size_bytes;
+        }
+        Ok(total)
+    }
+
     /// Build the parameter literals for one layer (host-side view; used by
     /// tests and tooling).
     pub fn layer_literals(&self, layer: &LayerManifest) -> Result<Vec<Literal>> {
@@ -212,6 +226,26 @@ mod tests {
         let mut p = entry(0, &[2]);
         p.offset_bytes = 2; // not a multiple of 4
         assert!(ws.param_f32(&p).is_err());
+    }
+
+    #[test]
+    fn staged_bytes_sums_and_validates() {
+        let ws = WeightStore::from_bytes(vec![0u8; 64]);
+        let layer = LayerManifest {
+            index: 0,
+            name: "l".into(),
+            kind: "conv".into(),
+            hlo: "x".into(),
+            input_shape: vec![1],
+            output_shape: vec![1],
+            output_bytes: 4,
+            flops: 0,
+            params: vec![entry(0, &[2, 3]), entry(24, &[4])],
+        };
+        assert_eq!(ws.layer_staged_bytes(&layer).unwrap(), 40);
+        let mut bad = layer.clone();
+        bad.params.push(entry(60, &[8])); // runs past the blob
+        assert!(ws.layer_staged_bytes(&bad).is_err());
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! Failure injection: corrupted or missing artifacts must fail loudly and
-//! precisely, never crash or silently mis-serve.
+//! precisely, never crash or silently mis-serve — and the overlapped
+//! runner must drain cleanly on mid-burst stage faults, naming the
+//! originating stage and frame index, without hangs or partial reports.
 
 use std::fs;
 
+use neukonfig::coordinator::experiments::ExperimentSetup;
+use neukonfig::coordinator::{
+    Pipeline, PipelinedRunner, Placement, PipelineState, PlacementCase, RouteOutcome, ScenarioA,
+};
+use neukonfig::device::FrameSource;
 use neukonfig::models::{default_artifacts_dir, ArtifactIndex, ModelManifest};
 use neukonfig::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
 
@@ -106,4 +113,178 @@ fn garbage_manifest_json_rejected() {
         fs::write(dir.join("manifest.json"), "{not json").unwrap();
         assert!(ModelManifest::load(dir).is_err());
     });
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined-runner fault injection (artifact-gated like the suites above)
+// ---------------------------------------------------------------------------
+
+const MODEL: &str = "mobilenetv2";
+
+/// Mid-burst edge-chain fault: frame 2 of 5 has the wrong shape, so the
+/// edge stage fails after two good frames. Both stage modes must return a
+/// single error naming the edge stage and the frame index — no hang, no
+/// partial report set.
+#[test]
+fn edge_fault_mid_burst_names_stage_and_frame() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    let p = env.build_pipeline(n / 2, Placement::NewContainers).unwrap();
+    p.transition(PipelineState::Active).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 5);
+    let mut frames: Vec<_> = (0..5)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+    frames[2] = literal_from_f32(&[1, 8, 8, 3], &vec![0.1; 192]).unwrap();
+
+    for runner in [PipelinedRunner::new(2), PipelinedRunner::two_stage(2)] {
+        let err = match runner.run(&p, &frames) {
+            Err(e) => e,
+            Ok(_) => panic!("bad frame accepted ({:?})", runner.stages),
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("edge stage failed at frame 2"),
+            "{:?}: error must name stage + frame, got: {msg}",
+            runner.stages
+        );
+    }
+}
+
+/// Cloud-chain fault: at split 0 the (empty) edge chain passes the frame
+/// through untouched, so a malformed frame first explodes in the cloud
+/// stage. The error must name the cloud stage and frame index.
+#[test]
+fn cloud_fault_mid_burst_names_stage_and_frame() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let p = env.build_pipeline(0, Placement::NewContainers).unwrap();
+    p.transition(PipelineState::Active).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 6);
+    let mut frames: Vec<_> = (0..4)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+    frames[1] = literal_from_f32(&[1, 8, 8, 3], &vec![0.2; 192]).unwrap();
+
+    for runner in [PipelinedRunner::new(3), PipelinedRunner::two_stage(3)] {
+        let err = match runner.run(&p, &frames) {
+            Err(e) => e,
+            Ok(_) => panic!("bad frame accepted ({:?})", runner.stages),
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("cloud stage failed at frame 1"),
+            "{:?}: error must name stage + frame, got: {msg}",
+            runner.stages
+        );
+    }
+}
+
+/// Deliberately mismatched chains via the test-support constructor: the
+/// edge chain ends at layer 2 but the cloud chain starts at layer 3, so
+/// every frame's intermediate has the wrong shape for the cloud stage.
+/// The runner must fail at frame 0, cleanly.
+#[test]
+fn mismatched_chain_boundary_fails_cleanly() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    assert!(n >= 4, "test needs at least 4 layers");
+    let donor = env.build_pipeline(2, Placement::NewContainers).unwrap();
+
+    let edge_chain =
+        ChainExecutor::build(env.edge.clone(), &env.manifest, 0..2, &env.weights).unwrap();
+    let cloud_chain =
+        ChainExecutor::build(env.cloud.clone(), &env.manifest, 3..n, &env.weights).unwrap();
+    let broken = Pipeline::assemble(
+        2,
+        edge_chain,
+        cloud_chain,
+        env.link.clone(),
+        env.clock.clone(),
+        donor.edge_container.clone(),
+        donor.cloud_container.clone(),
+    );
+    broken.transition(PipelineState::Active).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 9);
+    let frames: Vec<_> = (0..3)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+    let err = PipelinedRunner::new(2).run(&broken, &frames).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("cloud stage failed at frame 0"),
+        "mismatched boundary must fail at the cloud stage: {msg}"
+    );
+}
+
+/// A switch racing a pipelined burst: `route_batch` pins the active
+/// pipeline, so the burst completes in full (ordered, no partial results)
+/// while concurrent Scenario-A switches proceed — no hang, no error on
+/// either side. Frames routed after the switch hit the new active.
+#[test]
+fn racing_switch_during_pipelined_burst_is_clean() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    let strat =
+        ScenarioA::deploy(env.clone(), n / 2, n / 3, PlacementCase::SameContainer).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 2);
+    let frames: Vec<_> = (0..6)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+    let router = strat.router.clone();
+
+    std::thread::scope(|s| {
+        let burst = s.spawn(|| router.route_batch(&frames, PipelinedRunner::new(2)));
+        // Toggle active <-> standby while the burst is in flight.
+        for _ in 0..4 {
+            strat.switch().unwrap();
+        }
+        // Two clean outcomes are allowed: the burst pinned the pipeline
+        // before any switch (full, ordered results), or a switch won the
+        // race to the serve gate first (a loud "not serving" error).
+        // Anything else — a hang, a panic, partial results — fails.
+        match burst.join().expect("burst panicked") {
+            Ok(outcomes) => {
+                assert_eq!(outcomes.len(), frames.len(), "partial results returned");
+                for (i, o) in outcomes.iter().enumerate() {
+                    match o {
+                        RouteOutcome::Processed(rep) => {
+                            assert!(rep.output.to_vec::<f32>().is_ok(), "frame {i} corrupted")
+                        }
+                        RouteOutcome::DroppedPaused => {
+                            panic!("frame {i} dropped: router never paused")
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("not serving"), "unclean racing error: {msg}");
+            }
+        }
+    });
+    // After the dust settles the router still serves frames.
+    match router.route(&frames[0]).unwrap() {
+        RouteOutcome::Processed(_) => {}
+        RouteOutcome::DroppedPaused => panic!("router wedged after racing switches"),
+    }
 }

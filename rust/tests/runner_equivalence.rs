@@ -1,0 +1,182 @@
+//! Property test: overlapped execution is a pure wall-clock optimisation.
+//!
+//! For random models, partition points, depths 1..8, and both stage modes,
+//! every `PipelinedRunner` report must match sequential `Pipeline::infer`:
+//!
+//! * `output` bitwise-identical, in frame order;
+//! * `t_transfer` bitwise-identical — the link is the timing authority for
+//!   transfers and, frame sizes being equal, charges exactly
+//!   `latency + bytes*8/bandwidth` on both paths;
+//! * `t_edge`/`t_cloud` are *measured* PJRT wall time, which no two runs
+//!   reproduce bit-for-bit — for them the property is structural: positive
+//!   totals, per-layer vectors sized to the split, and per-layer sums
+//!   bounded by the chain totals (boundary upload/readback is chain-level).
+//!
+//! `proptest` is unavailable offline, so cases come from the in-tree
+//! deterministic PRNG; failure messages carry the case coordinates.
+//!
+//! Artifact-backed: skips when `make artifacts` has not run.
+
+use std::time::Duration;
+
+use neukonfig::coordinator::experiments::ExperimentSetup;
+use neukonfig::coordinator::{PipelinedRunner, Placement, PipelineState};
+use neukonfig::device::FrameSource;
+use neukonfig::util::prng::Prng;
+
+const BURST: usize = 6;
+const SPLITS_PER_MODEL: usize = 3;
+const DEPTHS_PER_SPLIT: usize = 3;
+
+/// Per-layer timing vectors must be shaped by the split and sum to no more
+/// than the chain totals (small epsilon for Duration::mul_f64 rounding).
+fn check_layer_timing(
+    rep: &neukonfig::coordinator::InferenceReport,
+    split: usize,
+    n: usize,
+    ctx: &str,
+) {
+    assert_eq!(rep.edge_per_layer.len(), split, "{ctx}: edge per-layer arity");
+    assert_eq!(rep.cloud_per_layer.len(), n - split, "{ctx}: cloud per-layer arity");
+    let eps = Duration::from_micros(1) * (n as u32 + 1);
+    let edge_sum: Duration = rep.edge_per_layer.iter().sum();
+    let cloud_sum: Duration = rep.cloud_per_layer.iter().sum();
+    assert!(
+        edge_sum <= rep.t_edge + eps,
+        "{ctx}: edge per-layer sum {edge_sum:?} > t_edge {:?}",
+        rep.t_edge
+    );
+    assert!(
+        cloud_sum <= rep.t_cloud + eps,
+        "{ctx}: cloud per-layer sum {cloud_sum:?} > t_cloud {:?}",
+        rep.t_cloud
+    );
+    assert!(rep.edge_per_layer.iter().all(|d| *d > Duration::ZERO) || split == 0);
+    assert!(rep.cloud_per_layer.iter().all(|d| *d > Duration::ZERO) || split == n);
+}
+
+#[test]
+fn pipelined_reports_match_sequential_across_models_splits_depths() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Prng::new(0x3A6E5);
+
+    for model in setup.index.models.clone() {
+        let env = setup.env(&model).unwrap();
+        let n = env.manifest.num_layers();
+        let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 7);
+        let frames: Vec<_> = (0..BURST)
+            .map(|i| env.frame_literal(&cam.frame(i as u64)).unwrap())
+            .collect();
+
+        // Random interior splits plus both degenerate boundaries (empty
+        // edge chain / empty cloud chain) — the corners most likely to
+        // break hand-off code.
+        let mut splits = vec![0, n];
+        for _ in 0..SPLITS_PER_MODEL {
+            splits.push(rng.next_below(n + 1));
+        }
+
+        for split in splits {
+            let p = env
+                .build_pipeline(split, Placement::NewContainers)
+                .unwrap();
+            p.transition(PipelineState::Active).unwrap();
+
+            let sequential: Vec<_> = frames.iter().map(|f| p.infer(f).unwrap()).collect();
+            let expected: Vec<Vec<f32>> = sequential
+                .iter()
+                .map(|r| r.output.to_vec::<f32>().unwrap())
+                .collect();
+            for (i, rep) in sequential.iter().enumerate() {
+                check_layer_timing(rep, split, n, &format!("{model} split {split} seq frame {i}"));
+            }
+
+            for _ in 0..DEPTHS_PER_SPLIT {
+                let depth = 1 + rng.next_below(8);
+                for runner in [PipelinedRunner::new(depth), PipelinedRunner::two_stage(depth)] {
+                    let ctx = format!(
+                        "{model} split {split} depth {depth} stages {:?}",
+                        runner.stages
+                    );
+                    let piped = runner.run(&p, &frames).unwrap();
+                    assert_eq!(piped.len(), frames.len(), "{ctx}: report count");
+                    for (i, (rep, seq)) in piped.iter().zip(&sequential).enumerate() {
+                        assert_eq!(
+                            rep.output.to_vec::<f32>().unwrap(),
+                            expected[i],
+                            "{ctx}: frame {i} out of order or corrupted"
+                        );
+                        assert_eq!(
+                            rep.t_transfer, seq.t_transfer,
+                            "{ctx}: frame {i} transfer-time authority diverged"
+                        );
+                        assert!(rep.t_edge > Duration::ZERO || split == 0, "{ctx}: frame {i}");
+                        assert!(rep.t_cloud > Duration::ZERO || split == n, "{ctx}: frame {i}");
+                        check_layer_timing(rep, split, n, &format!("{ctx} frame {i}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The hot_path acceptance shape in miniature: on a transfer-bound
+/// realtime-clock configuration, three stages must not be slower than two
+/// (the transfer of frame N overlaps both edge(N+1) and cloud(N-1)).
+#[test]
+fn three_stages_no_slower_than_two_when_transfer_bound() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = &setup.index.models[0];
+    let manifest = setup.manifest(model).unwrap();
+    // Realtime clock: simulated transfer cost becomes real wall time, so
+    // stage overlap is observable. Sim costs zeroed so bring-up does not
+    // really sleep. Bandwidth low enough that transfer dominates compute.
+    let mut cfg = setup.cfg.clone().without_sim_costs();
+    cfg.network.high_mbps = 2_000.0;
+    let env = neukonfig::coordinator::EdgeCloudEnv::new(
+        cfg,
+        manifest,
+        neukonfig::clock::Clock::realtime(),
+    )
+    .unwrap();
+    let n = env.manifest.num_layers();
+    // Split at the fattest intermediate tensor: maximises bytes on the wire.
+    let split = (1..n)
+        .max_by_key(|&k| env.manifest.transfer_bytes(k))
+        .unwrap_or(n / 2);
+    let p = env.build_pipeline(split, Placement::NewContainers).unwrap();
+    p.transition(PipelineState::Active).unwrap();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 3);
+    let frames: Vec<_> = (0..8)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+
+    let time = |runner: PipelinedRunner| {
+        // Warm once, then best-of-3 (least-noise estimator).
+        runner.run(&p, &frames).unwrap();
+        (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                runner.run(&p, &frames).unwrap();
+                t0.elapsed()
+            })
+            .min()
+            .unwrap()
+    };
+    let two = time(PipelinedRunner::two_stage(2));
+    let three = time(PipelinedRunner::new(2));
+    // Generous slack: the property is "not slower", not a fixed speedup —
+    // CI machines are noisy and compute may still dominate there.
+    assert!(
+        three <= two.mul_f64(1.25),
+        "3-stage ({three:?}) should not be slower than 2-stage ({two:?}) \
+         on a transfer-bound burst"
+    );
+}

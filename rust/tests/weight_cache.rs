@@ -1,0 +1,187 @@
+//! Byte-budgeted weight-cache eviction: the memory-vs-downtime knob.
+//!
+//! These tests run without model artifacts — synthetic layer manifests
+//! over an in-memory `WeightStore` stage real PJRT device buffers through
+//! a real `Domain`, so the policy under test is exactly the production
+//! path (`Domain::layer_weight_buffers`).
+
+use std::sync::Arc;
+
+use neukonfig::models::{LayerManifest, ParamEntry};
+use neukonfig::runtime::{Domain, WeightStore};
+
+/// One synthetic layer: a single `[floats]`-shaped param at `offset`
+/// floats into the blob. Staged size = 4 * floats bytes.
+fn layer(index: usize, offset_floats: usize, floats: usize) -> LayerManifest {
+    LayerManifest {
+        index,
+        name: format!("syn{index}"),
+        kind: "conv".into(),
+        hlo: "unused".into(),
+        input_shape: vec![1],
+        output_shape: vec![1],
+        output_bytes: 4,
+        flops: 0,
+        params: vec![ParamEntry {
+            name: format!("w{index}"),
+            shape: vec![floats],
+            offset_bytes: offset_floats * 4,
+            size_bytes: floats * 4,
+        }],
+    }
+}
+
+fn store(total_floats: usize) -> WeightStore {
+    WeightStore::from_bytes(vec![0u8; total_floats * 4])
+}
+
+fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+fn stage(domain: &Arc<Domain>, ws: &WeightStore, l: &LayerManifest) {
+    domain.layer_weight_buffers(ws, l, true).unwrap();
+}
+
+#[test]
+fn budget_never_exceeded_across_repeated_repartitions() {
+    let domain = Domain::new("budgeted", 1.0).unwrap();
+    let ws = store(4096);
+    // 16 layers x 1 KiB staged each; budget of 4 KiB holds at most 4.
+    let layers: Vec<_> = (0..16).map(|i| layer(i, i * 256, 256)).collect();
+    domain.set_weight_cache_budget_mb(Some(mb(4096)));
+
+    // "Repartition" sweeps: restage overlapping layer ranges repeatedly.
+    for split in [4usize, 9, 2, 14, 7] {
+        for l in &layers[..split] {
+            stage(&domain, &ws, l);
+            assert!(
+                domain.weight_cache_bytes() <= 4096,
+                "budget exceeded: {} bytes resident",
+                domain.weight_cache_bytes()
+            );
+        }
+        assert!(domain.weight_cache_len() <= 4);
+    }
+    let s = domain.weight_cache_stats();
+    assert_eq!(s.bytes, domain.weight_cache_bytes());
+    assert_eq!(s.entries as usize, domain.weight_cache_len());
+    assert_eq!(s.misses, s.entries + s.evictions, "occupancy must reconcile");
+}
+
+#[test]
+fn lru_victim_order_is_deterministic() {
+    let domain = Domain::new("lru", 1.0).unwrap();
+    let ws = store(1024);
+    let a = layer(0, 0, 256);
+    let b = layer(1, 256, 256);
+    let c = layer(2, 512, 256);
+    let d = layer(3, 768, 256);
+    // Budget holds exactly two 1 KiB entries.
+    domain.set_weight_cache_budget_mb(Some(mb(2048)));
+
+    stage(&domain, &ws, &a);
+    stage(&domain, &ws, &b);
+    // Touch A: B becomes least-recently-used.
+    stage(&domain, &ws, &a);
+    stage(&domain, &ws, &c);
+    assert!(domain.weight_cache_contains(0, "syn0"), "A was just used");
+    assert!(!domain.weight_cache_contains(1, "syn1"), "B must be the LRU victim");
+    assert!(domain.weight_cache_contains(2, "syn2"));
+    // Insert D: A (older than C) goes next.
+    stage(&domain, &ws, &d);
+    assert!(!domain.weight_cache_contains(0, "syn0"), "A must be evicted next");
+    assert!(domain.weight_cache_contains(2, "syn2"));
+    assert!(domain.weight_cache_contains(3, "syn3"));
+
+    let s = domain.weight_cache_stats();
+    assert_eq!(s.hits, 1, "only the re-touch of A hit");
+    assert_eq!(s.misses, 4);
+    assert_eq!(s.evictions, 2);
+    assert_eq!(s.entries, 2);
+    assert_eq!(s.misses, s.entries + s.evictions);
+}
+
+#[test]
+fn oversize_entry_drains_cache_but_never_lies_about_budget() {
+    let domain = Domain::new("oversize", 1.0).unwrap();
+    let ws = store(2048);
+    domain.set_weight_cache_budget_mb(Some(mb(1024)));
+    stage(&domain, &ws, &layer(0, 0, 128)); // 512 B, fits
+    assert_eq!(domain.weight_cache_len(), 1);
+    // 4 KiB entry can never fit a 1 KiB budget: everything is evicted,
+    // including the oversize entry itself.
+    stage(&domain, &ws, &layer(1, 0, 1024));
+    assert_eq!(domain.weight_cache_len(), 0);
+    assert_eq!(domain.weight_cache_bytes(), 0);
+    let s = domain.weight_cache_stats();
+    assert_eq!(s.evictions, 2);
+    assert_eq!(s.misses, s.entries + s.evictions);
+}
+
+#[test]
+fn shrinking_budget_evicts_immediately() {
+    let domain = Domain::new("shrink", 1.0).unwrap();
+    let ws = store(1024);
+    domain.set_weight_cache_budget_mb(None); // unbounded
+    for i in 0..4 {
+        stage(&domain, &ws, &layer(i, i * 256, 256));
+    }
+    assert_eq!(domain.weight_cache_len(), 4);
+    assert_eq!(domain.weight_cache_bytes(), 4096);
+
+    // The knob takes effect without waiting for the next staging.
+    domain.set_weight_cache_budget_mb(Some(mb(2048)));
+    assert_eq!(domain.weight_cache_len(), 2);
+    assert!(domain.weight_cache_bytes() <= 2048);
+    // Oldest two (0, 1) were the victims.
+    assert!(!domain.weight_cache_contains(0, "syn0"));
+    assert!(!domain.weight_cache_contains(1, "syn1"));
+    assert!(domain.weight_cache_contains(2, "syn2"));
+    assert!(domain.weight_cache_contains(3, "syn3"));
+
+    // Lifting the budget stops eviction; nothing comes back by itself.
+    domain.set_weight_cache_budget_mb(None);
+    assert_eq!(domain.weight_cache_len(), 2);
+}
+
+#[test]
+fn clear_weight_cache_zeroes_everything_for_pause_resume() {
+    let domain = Domain::new("clear", 1.0).unwrap();
+    let ws = store(1024);
+    domain.set_weight_cache_budget_mb(Some(mb(4096)));
+    for i in 0..3 {
+        stage(&domain, &ws, &layer(i, i * 256, 256));
+    }
+    stage(&domain, &ws, &layer(0, 0, 256)); // one hit
+    assert!(domain.weight_cache_bytes() > 0);
+
+    domain.clear_weight_cache();
+    assert_eq!(domain.weight_cache_len(), 0);
+    assert_eq!(domain.weight_cache_bytes(), 0);
+    // Counters survive a clear (they describe history, not occupancy)...
+    let s = domain.weight_cache_stats();
+    assert_eq!(s.hits, 1);
+    assert_eq!(s.misses, 3);
+    assert_eq!(s.entries, 0);
+    assert_eq!(s.bytes, 0);
+    // ...and the budget survives too: restaging still enforces it.
+    assert_eq!(domain.weight_cache_budget_bytes(), Some(4096));
+    // The stats reset zeroes the counters separately.
+    domain.reset_weight_cache_stats();
+    let s = domain.weight_cache_stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+}
+
+#[test]
+fn uncached_staging_bypasses_cache_and_counters() {
+    let domain = Domain::new("bypass", 1.0).unwrap();
+    let ws = store(256);
+    domain.set_weight_cache_budget_mb(Some(mb(1024)));
+    let l = layer(0, 0, 64);
+    let (_, hit) = domain.layer_weight_buffers(&ws, &l, false).unwrap();
+    assert!(!hit);
+    assert_eq!(domain.weight_cache_len(), 0, "use_cache=false must not populate");
+    let s = domain.weight_cache_stats();
+    assert_eq!((s.hits, s.misses), (0, 0), "use_cache=false must not count");
+}
