@@ -22,9 +22,10 @@ use std::sync::Arc;
 
 use neukonfig::bench::{bench, bench_measured, BenchConfig, Report};
 use neukonfig::clock::Clock;
+use neukonfig::codec::TransferCodec;
 use neukonfig::coordinator::experiments::ExperimentSetup;
 use neukonfig::coordinator::{
-    EdgeCloudEnv, PipelinedRunner, PipelineState, PlacementCase, Placement, ScenarioA,
+    EdgeCloudEnv, PipelinedRunner, PipelineState, PlacementCase, Placement, Planner, ScenarioA,
 };
 use neukonfig::device::FrameSource;
 use neukonfig::metrics::{fmt_duration, Table};
@@ -196,6 +197,70 @@ fn main() -> anyhow::Result<()> {
         },
     ));
 
+    // --- transfer codec: wire cost at low/high bandwidth ------------------
+    // Simulated clock so the measured t_transfer is the link's priced cost
+    // (queueing + serialisation of the *encoded* payload), not wall time;
+    // split at the fattest intermediate so the codec has the most bytes to
+    // shrink. Row names deliberately omit the split so the bench-gate
+    // baseline survives profile recalibration.
+    let cc_env = setup.env("mobilenetv2")?;
+    let cc_n = cc_env.manifest.num_layers();
+    let cc_split = (1..cc_n)
+        .max_by_key(|&k| cc_env.manifest.transfer_bytes(k))
+        .unwrap_or(cc_n / 2);
+    let cc_frame = cc_env.frame_literal(&cam.frame(200))?;
+    let mut codec_rows: Vec<(TransferCodec, f64, f64)> = Vec::new();
+    for &mbps in &[net.low_mbps, net.high_mbps] {
+        for codec in [TransferCodec::Fp32, TransferCodec::Fp16, TransferCodec::Int8] {
+            cc_env.link.set_bandwidth(mbps);
+            // Scoped per iteration: the containers' memory reservations
+            // release before the next pipeline starts.
+            let mut p = cc_env.build_pipeline(cc_split, Placement::NewContainers)?;
+            p.codec = codec;
+            p.transition(PipelineState::Active)?;
+            let r = push(bench_measured(
+                &format!(
+                    "frame transfer, {} @ {mbps:.0} Mbps (fattest split)",
+                    codec.label()
+                ),
+                &cfg,
+                || p.infer(&cc_frame).unwrap().t_transfer,
+            ));
+            codec_rows.push((codec, mbps, r.summary.mean));
+        }
+    }
+    let codec_mean = |codec: TransferCodec, mbps: f64| {
+        codec_rows
+            .iter()
+            .find(|(c, b, _)| *c == codec && *b == mbps)
+            .unwrap()
+            .2
+    };
+
+    // Codec-aware planning must actually move an optimum somewhere in the
+    // model zoo, otherwise the planner integration is dead weight.
+    let mut split_notes = Vec::new();
+    let mut any_split_moved = false;
+    for model in &setup.index.models {
+        let prof = neukonfig::profiler::default_analytic(&setup.manifest(model)?);
+        for &mbps in &[net.low_mbps, net.high_mbps] {
+            let fp32 = Planner::new(prof.clone(), net.latency)
+                .with_codec(TransferCodec::Fp32)
+                .plan(mbps)
+                .split;
+            let int8 = Planner::new(prof.clone(), net.latency)
+                .with_codec(TransferCodec::Int8)
+                .plan(mbps)
+                .split;
+            any_split_moved |= int8 != fp32;
+            split_notes.push(format!("{model} @ {mbps:.0} Mbps: fp32 k={fp32}, int8 k={int8}"));
+        }
+    }
+    assert!(
+        any_split_moved,
+        "int8 planning should move at least one optimum: {split_notes:?}"
+    );
+
     // --- container-sim control plane ------------------------------------
     push(bench_measured("pipeline init, same container (B2 init)", &cfg, || {
         let active = router.active();
@@ -234,7 +299,23 @@ fn main() -> anyhow::Result<()> {
          overlaps the wire with both compute stages",
         tb_two.summary.mean / tb_three.summary.mean.max(1e-9),
     ));
+    report.note(format!(
+        "transfer codec at {:.0} Mbps (split {cc_split}): fp16 {:.2}x, \
+         int8 {:.2}x lower mean t_transfer than fp32; codec-aware plans: {}",
+        net.low_mbps,
+        codec_mean(TransferCodec::Fp32, net.low_mbps)
+            / codec_mean(TransferCodec::Fp16, net.low_mbps).max(1e-12),
+        codec_mean(TransferCodec::Fp32, net.low_mbps)
+            / codec_mean(TransferCodec::Int8, net.low_mbps).max(1e-12),
+        split_notes.join("; "),
+    ));
     assert!(switch.summary.p95 < 0.98e-3, "switch p95 must beat the paper's 0.98 ms");
+    assert!(
+        codec_mean(TransferCodec::Int8, net.low_mbps) * 2.0
+            <= codec_mean(TransferCodec::Fp32, net.low_mbps),
+        "int8 must at least halve mean t_transfer on the transfer-bound row at {} Mbps",
+        net.low_mbps
+    );
     report.print();
     neukonfig::bench::write_json_baseline("BENCH_hot_path.json", "hot_path", &all)?;
     println!("wrote BENCH_hot_path.json ({} rows)", all.len());

@@ -213,6 +213,18 @@ pub fn compare_baselines(
     Ok(out)
 }
 
+/// Whether a `BENCH_*.json` baseline document carries `"provisional":
+/// true` — a hand-seeded placeholder committed to arm the CI gate before a
+/// reference machine has produced real numbers. Regressions against a
+/// provisional baseline are reported but must not fail the gate; replacing
+/// the file with real `cargo bench --bench hot_path` output (which never
+/// writes the flag) makes the gate authoritative.
+pub fn baseline_is_provisional(doc: &str) -> bool {
+    crate::util::json::parse(doc)
+        .map(|v| matches!(*v.get("provisional"), crate::util::json::Value::Bool(true)))
+        .unwrap_or(false)
+}
+
 /// Paper-vs-measured report printed by each bench binary.
 #[derive(Debug, Default)]
 pub struct Report {
@@ -329,6 +341,20 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].name, "kept");
         assert!(!rows[0].regressed);
+    }
+
+    #[test]
+    fn provisional_flag_detection() {
+        assert!(baseline_is_provisional(
+            "{\"title\": \"t\", \"provisional\": true, \"results\": []}"
+        ));
+        assert!(!baseline_is_provisional(
+            "{\"title\": \"t\", \"provisional\": false, \"results\": []}"
+        ));
+        // Absent flag (the results_to_json output) and malformed docs are
+        // both authoritative/non-provisional.
+        assert!(!baseline_is_provisional(&results_to_json("t", &[fixed("a", 10)])));
+        assert!(!baseline_is_provisional("{oops"));
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Activation-transfer codec for the edge->cloud hand-off.
+//!
+//! The paper's transfer term `T_t = latency + bytes/bandwidth` (Equation 1)
+//! dominates end-to-end latency at the testbed's 5-20 Mbps uplinks, and the
+//! bytes crossing the cut are the one factor the system controls after the
+//! split is chosen. This module encodes the intermediate activation before
+//! it enters [`crate::netsim::Link`] and decodes it on the cloud side:
+//!
+//! * [`TransferCodec::Fp32`] — lossless baseline: the raw f32 bytes ship
+//!   untouched, bitwise- and duration-identical to the pre-codec pipeline.
+//! * [`TransferCodec::Fp16`] — software IEEE binary16 with round-to-nearest-
+//!   even and overflow *clamped* to ±65504 (no infinities on the wire).
+//!   Halves the payload; reconstruction error is bounded by
+//!   `|x| * 2^-11 + 3e-8` for `|x| <= 65504`.
+//! * [`TransferCodec::Int8`] — per-tensor affine quantisation
+//!   (`x ~ min + q * scale`, `q` in 0..=255, scale/zero-point in f64 so
+//!   extreme f32 spans cannot overflow). Quarters the payload plus a
+//!   16-byte header; error is bounded by `scale / 2` plus one f32 ulp, and
+//!   constant tensors round-trip exactly.
+//!
+//! The codec must be visible to the planner, not bolted on after it: a
+//! quartered payload moves the Equation-1 optimum (see
+//! [`crate::profiler::ModelProfile::optimal_split_coded`]), which is why
+//! [`TransferCodec::encoded_bytes`] is the single wire-byte model shared by
+//! the live pipeline, the planner, and the manifests.
+//!
+//! Selected via `BuildOptions.transfer_codec` / `NEUKONFIG_TRANSFER_CODEC`
+//! (`fp32` | `fp16` | `int8`; unset = `fp32`).
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// Bytes of the Int8 side-channel header (min + scale, both f64).
+pub const INT8_HEADER_BYTES: usize = 16;
+
+/// How the intermediate activation is encoded for the uplink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransferCodec {
+    /// Raw f32 bytes — lossless, the pre-codec behaviour.
+    #[default]
+    Fp32,
+    /// IEEE binary16, overflow clamped to +-65504.
+    Fp16,
+    /// Per-tensor affine 8-bit quantisation.
+    Int8,
+}
+
+impl TransferCodec {
+    /// Parse a codec name (the `NEUKONFIG_TRANSFER_CODEC` format). Unset,
+    /// empty, or unrecognised values fall back to the lossless baseline.
+    pub fn parse(raw: Option<&str>) -> TransferCodec {
+        match raw.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+            Some("fp16") | Some("f16") | Some("half") => TransferCodec::Fp16,
+            Some("int8") | Some("i8") | Some("u8") => TransferCodec::Int8,
+            _ => TransferCodec::Fp32,
+        }
+    }
+
+    /// Codec selection from `NEUKONFIG_TRANSFER_CODEC`.
+    pub fn from_env() -> TransferCodec {
+        Self::parse(std::env::var("NEUKONFIG_TRANSFER_CODEC").ok().as_deref())
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransferCodec::Fp32 => "fp32",
+            TransferCodec::Fp16 => "fp16",
+            TransferCodec::Int8 => "int8",
+        }
+    }
+
+    /// Wire bytes for a raw f32 payload of `raw_bytes` — the single
+    /// byte model shared by the pipeline, the planner, and the manifests.
+    pub fn encoded_bytes(&self, raw_bytes: usize) -> usize {
+        match self {
+            TransferCodec::Fp32 => raw_bytes,
+            TransferCodec::Fp16 => raw_bytes / 2,
+            TransferCodec::Int8 => raw_bytes / 4 + INT8_HEADER_BYTES,
+        }
+    }
+}
+
+/// An encoded activation payload.
+#[derive(Debug, Clone)]
+pub enum EncodedPayload {
+    /// Raw little-endian f32 bytes.
+    Fp32(Vec<u8>),
+    /// binary16 bit patterns, one per element.
+    Fp16(Vec<u16>),
+    /// Quantised bytes plus the per-tensor affine parameters.
+    Int8 { q: Vec<u8>, min: f64, scale: f64 },
+}
+
+/// An encoded activation with enough metadata to rebuild the `Literal`.
+#[derive(Debug, Clone)]
+pub struct EncodedActivation {
+    pub codec: TransferCodec,
+    /// Array dims of the source literal (f32, row-major).
+    pub dims: Vec<usize>,
+    /// Size of the source literal in bytes.
+    pub raw_bytes: usize,
+    pub payload: EncodedPayload,
+}
+
+impl EncodedActivation {
+    /// Bytes that actually cross the link.
+    pub fn wire_bytes(&self) -> usize {
+        match &self.payload {
+            EncodedPayload::Fp32(b) => b.len(),
+            EncodedPayload::Fp16(h) => h.len() * 2,
+            EncodedPayload::Int8 { q, .. } => q.len() + INT8_HEADER_BYTES,
+        }
+    }
+
+    /// `raw / wire` — 1.0 for the lossless baseline, ~2 for fp16, ~4 for
+    /// int8.
+    pub fn compression_ratio(&self) -> f64 {
+        let wire = self.wire_bytes();
+        if wire == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / wire as f64
+        }
+    }
+}
+
+// --- binary16 bit conversion (no `half` crate offline) ------------------
+
+/// f32 -> binary16 bits: round-to-nearest-even, overflow clamped to the
+/// largest finite f16 (±65504) so no infinities are manufactured on the
+/// wire. NaN stays NaN; inputs below ~2^-25 round to (signed) zero.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let mant32 = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN: clamp infinities like any overflow; keep NaN quiet.
+        return if mant32 != 0 { sign | 0x7e00 } else { sign | 0x7bff };
+    }
+    let e = exp32 - 127 + 15; // biased binary16 exponent
+    if e >= 0x1f {
+        return sign | 0x7bff; // overflow: clamp to 65504
+    }
+    if e <= 0 {
+        // Subnormal (or zero) in f16: value = h * 2^-24 with h a 10-bit
+        // field. h = (mant | implicit-one) >> (14 - e), RNE on the
+        // shifted-out bits; a carry into h = 0x400 lands exactly on the
+        // smallest normal (2^-14), which the bit layout encodes for free.
+        if e < -10 {
+            return sign; // below half the smallest subnormal
+        }
+        let m = mant32 | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = m >> shift;
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    // Normal range: round the 23-bit mantissa to 10 bits (RNE). A mantissa
+    // carry propagates into the exponent arithmetically; if it carries past
+    // the largest finite exponent, clamp.
+    let mut h = ((e as u32) << 10) | (mant32 >> 13);
+    let rem = mant32 & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h += 1;
+    }
+    if (h >> 10) >= 0x1f {
+        return sign | 0x7bff;
+    }
+    sign | h as u16
+}
+
+/// binary16 bits -> f32. Exact: every finite f16 is representable in f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((h >> 10) & 0x1f) as i32;
+    let mant = (h & 0x3ff) as u32;
+    if e == 0x1f {
+        return if mant != 0 {
+            f32::NAN
+        } else {
+            sign * f32::INFINITY
+        };
+    }
+    if e == 0 {
+        // Subnormal: mant * 2^-24 (0x3380_0000 is exactly 2^-24).
+        return sign * mant as f32 * f32::from_bits(0x3380_0000);
+    }
+    let bits = (((e - 15 + 127) as u32) << 23) | (mant << 13);
+    sign * f32::from_bits(bits)
+}
+
+// --- slice-level encode / decode -----------------------------------------
+
+/// Encode a host f32 slice under `codec`.
+pub fn encode_f32s(codec: TransferCodec, values: &[f32]) -> EncodedPayload {
+    match codec {
+        TransferCodec::Fp32 => {
+            let mut bytes = Vec::with_capacity(values.len() * 4);
+            for v in values {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            EncodedPayload::Fp32(bytes)
+        }
+        TransferCodec::Fp16 => {
+            EncodedPayload::Fp16(values.iter().map(|&v| f32_to_f16_bits(v)).collect())
+        }
+        TransferCodec::Int8 => {
+            // Range scan and quantisation both in f64: an f32 span like
+            // [-3e38, 3e38] overflows f32 arithmetic but is tiny for f64.
+            let mut min = f64::INFINITY;
+            let mut max = f64::NEG_INFINITY;
+            for &v in values {
+                let v = v as f64;
+                if v < min {
+                    min = v;
+                }
+                if v > max {
+                    max = v;
+                }
+            }
+            if !(min.is_finite() && max.is_finite()) {
+                // Empty or all-non-finite tensor: degenerate parameters.
+                min = 0.0;
+                max = 0.0;
+            }
+            let span = max - min;
+            let scale = if span > 0.0 { span / 255.0 } else { 1.0 };
+            let q = values
+                .iter()
+                .map(|&v| ((v as f64 - min) / scale).round().clamp(0.0, 255.0) as u8)
+                .collect();
+            EncodedPayload::Int8 { q, min, scale }
+        }
+    }
+}
+
+/// Decode a payload back to host f32s.
+pub fn decode_to_f32s(payload: &EncodedPayload) -> Vec<f32> {
+    match payload {
+        EncodedPayload::Fp32(bytes) => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        EncodedPayload::Fp16(halves) => halves.iter().map(|&h| f16_bits_to_f32(h)).collect(),
+        EncodedPayload::Int8 { q, min, scale } => q
+            .iter()
+            .map(|&b| (min + b as f64 * scale) as f32)
+            .collect(),
+    }
+}
+
+// --- Literal-level encode / decode ---------------------------------------
+
+fn f32_dims(l: &Literal) -> Result<Vec<usize>> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("codec: non-array literal: {e:?}"))?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// Encode an f32 `Literal` for the wire.
+pub fn encode_literal(codec: TransferCodec, l: &Literal) -> Result<EncodedActivation> {
+    let dims = f32_dims(l)?;
+    let raw = l.raw_buf();
+    let expected: usize = dims.iter().product::<usize>() * 4;
+    anyhow::ensure!(
+        raw.len() == expected,
+        "codec: {} raw bytes but f32 shape {dims:?} needs {expected}",
+        raw.len()
+    );
+    let payload = match codec {
+        // Fp32 keeps the raw bytes verbatim — no float parsing, so the
+        // round trip is bitwise-identical by construction.
+        TransferCodec::Fp32 => EncodedPayload::Fp32(raw.to_vec()),
+        _ => {
+            // chunks_exact + from_le_bytes: no alignment assumptions on the
+            // literal's raw buffer.
+            let values: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            encode_f32s(codec, &values)
+        }
+    };
+    Ok(EncodedActivation { codec, dims, raw_bytes: raw.len(), payload })
+}
+
+/// Rebuild the f32 `Literal` the cloud chain consumes.
+pub fn decode_literal(enc: &EncodedActivation) -> Result<Literal> {
+    let bytes: Vec<u8> = match &enc.payload {
+        EncodedPayload::Fp32(b) => b.clone(),
+        other => {
+            let values = decode_to_f32s(other);
+            let mut bytes = Vec::with_capacity(values.len() * 4);
+            for v in &values {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            bytes
+        }
+    };
+    anyhow::ensure!(
+        bytes.len() == enc.raw_bytes,
+        "codec: decoded {} bytes but the source literal had {}",
+        bytes.len(),
+        enc.raw_bytes
+    );
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &enc.dims, &bytes)
+        .map_err(|e| anyhow!("codec: rebuilding literal: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label() {
+        assert_eq!(TransferCodec::parse(None), TransferCodec::Fp32);
+        assert_eq!(TransferCodec::parse(Some("")), TransferCodec::Fp32);
+        assert_eq!(TransferCodec::parse(Some("bogus")), TransferCodec::Fp32);
+        assert_eq!(TransferCodec::parse(Some("fp32")), TransferCodec::Fp32);
+        assert_eq!(TransferCodec::parse(Some(" FP16 ")), TransferCodec::Fp16);
+        assert_eq!(TransferCodec::parse(Some("half")), TransferCodec::Fp16);
+        assert_eq!(TransferCodec::parse(Some("Int8")), TransferCodec::Int8);
+        assert_eq!(TransferCodec::Fp16.label(), "fp16");
+        assert_eq!(TransferCodec::default(), TransferCodec::Fp32);
+    }
+
+    #[test]
+    fn wire_byte_model() {
+        assert_eq!(TransferCodec::Fp32.encoded_bytes(4096), 4096);
+        assert_eq!(TransferCodec::Fp16.encoded_bytes(4096), 2048);
+        assert_eq!(TransferCodec::Int8.encoded_bytes(4096), 1024 + 16);
+        assert_eq!(TransferCodec::Int8.encoded_bytes(0), INT8_HEADER_BYTES);
+    }
+
+    #[test]
+    fn f16_known_values_exact() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),
+            (6.103_515_6e-5, 0x0400), // smallest normal, 2^-14
+            (5.960_464_5e-8, 0x0001), // smallest subnormal, 2^-24
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "encode {x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "decode {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_clamps_not_inf() {
+        assert_eq!(f32_to_f16_bits(1e9), 0x7bff);
+        assert_eq!(f32_to_f16_bits(f32::MAX), 0x7bff);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfbff);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7bff);
+        // 65520 is the RNE midpoint to inf; we clamp instead.
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7bff);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_rne_ties_to_even() {
+        // 1 + 2^-11 sits exactly between 1.0 (even) and 1 + 2^-10: RNE
+        // keeps the even mantissa.
+        let tie = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00);
+        // 1 + 3*2^-11 ties between odd and even: rounds up to even.
+        let tie_up = 1.0 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3c02);
+    }
+
+    #[test]
+    fn int8_constant_tensor_round_trips_exactly() {
+        let xs = vec![3.7f32; 100];
+        let enc = encode_f32s(TransferCodec::Int8, &xs);
+        let back = decode_to_f32s(&enc);
+        assert_eq!(back, xs);
+        if let EncodedPayload::Int8 { q, min, scale } = enc {
+            assert!(q.iter().all(|&b| b == 0));
+            assert_eq!(min, 3.7f32 as f64);
+            assert_eq!(scale, 1.0);
+        } else {
+            panic!("wrong payload variant");
+        }
+    }
+
+    #[test]
+    fn int8_endpoints_are_exact() {
+        let xs = [-2.0f32, -1.0, 0.0, 1.5, 8.0];
+        let back = decode_to_f32s(&encode_f32s(TransferCodec::Int8, &xs));
+        // min and max always land on exact grid points 0 and 255.
+        assert_eq!(back[0], -2.0);
+        assert_eq!(back[4], 8.0);
+        let scale = 10.0 / 255.0;
+        for (x, y) in xs.iter().zip(&back) {
+            assert!(
+                (*x as f64 - *y as f64).abs() <= scale / 2.0 + 1e-9,
+                "{x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_extreme_span_does_not_overflow() {
+        let xs = [-3.0e38f32, 3.0e38];
+        let enc = encode_f32s(TransferCodec::Int8, &xs);
+        if let EncodedPayload::Int8 { min, scale, .. } = &enc {
+            assert!(min.is_finite() && scale.is_finite());
+        }
+        let back = decode_to_f32s(&enc);
+        assert!(back.iter().all(|v| v.is_finite()));
+        assert_eq!(back[0], -3.0e38);
+        assert_eq!(back[1], 3.0e38);
+    }
+
+    #[test]
+    fn fp32_slice_round_trip_is_bitwise() {
+        let xs = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, 3.4e38, -1e-42];
+        let back = decode_to_f32s(&encode_f32s(TransferCodec::Fp32, &xs));
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_tensor_is_harmless() {
+        for codec in [TransferCodec::Fp32, TransferCodec::Fp16, TransferCodec::Int8] {
+            let enc = encode_f32s(codec, &[]);
+            assert!(decode_to_f32s(&enc).is_empty());
+        }
+    }
+}

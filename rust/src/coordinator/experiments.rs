@@ -289,6 +289,56 @@ pub fn frame_drop_rows(
 }
 
 // ---------------------------------------------------------------------------
+// Transfer-codec comparison
+// ---------------------------------------------------------------------------
+
+/// One row of the codec comparison: what a given codec does to the planned
+/// split and the Equation-1 prediction at one bandwidth.
+#[derive(Debug, Clone)]
+pub struct CodecRow {
+    pub codec: crate::codec::TransferCodec,
+    pub bandwidth_mbps: f64,
+    pub split: usize,
+    /// Encoded bytes crossing the link at the planned split.
+    pub wire_bytes: usize,
+    /// Raw-to-wire ratio at the planned split.
+    pub compression: f64,
+    pub t_transfer_s: f64,
+    pub total_s: f64,
+}
+
+/// Plan every codec at the config's low and high bandwidths. Shows the
+/// memory-vs-downtime story of the codec knob: quantised transfers shrink
+/// `T_t`, which both lowers the predicted frame latency and moves the
+/// optimum split (usually earlier, shifting compute to the cloud).
+pub fn codec_comparison(
+    profile: &ModelProfile,
+    cfg: &ExperimentConfig,
+    codecs: &[crate::codec::TransferCodec],
+) -> Vec<CodecRow> {
+    let mut rows = Vec::new();
+    for &bw in &[cfg.network.low_mbps, cfg.network.high_mbps] {
+        for &codec in codecs {
+            let planner = super::planner::Planner::new(profile.clone(), cfg.network.latency)
+                .with_codec(codec);
+            let plan = planner.plan(bw);
+            let raw = profile.cut_bytes(plan.split);
+            let wire = codec.encoded_bytes(raw);
+            rows.push(CodecRow {
+                codec,
+                bandwidth_mbps: bw,
+                split: plan.split,
+                wire_bytes: wire,
+                compression: if wire == 0 { 1.0 } else { raw as f64 / wire as f64 },
+                t_transfer_s: plan.predicted.transfer.as_secs_f64(),
+                total_s: plan.predicted.total().as_secs_f64(),
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
 // Table I: memory accounting
 // ---------------------------------------------------------------------------
 
@@ -396,6 +446,7 @@ mod tests {
                 edge_time: Duration::from_millis(10),
                 cloud_time: Duration::from_millis(2),
                 output_bytes: 400_000 >> i,
+                ..Default::default()
             })
             .collect();
         ModelProfile { model: "toy".into(), input_bytes: 800_000, layers }
@@ -436,6 +487,28 @@ mod tests {
             &[30.0],
         );
         assert!(base[0].outcome.dropped > dyn_b[0].outcome.dropped);
+    }
+
+    #[test]
+    fn codec_comparison_rewards_quantised_transfers() {
+        use crate::codec::TransferCodec;
+        let cfg = ExperimentConfig::new();
+        let codecs = [TransferCodec::Fp32, TransferCodec::Fp16, TransferCodec::Int8];
+        let rows = codec_comparison(&profile(), &cfg, &codecs);
+        assert_eq!(rows.len(), 6); // 2 bandwidths x 3 codecs
+        let at = |bw: f64, c: TransferCodec| {
+            rows.iter()
+                .find(|r| r.bandwidth_mbps == bw && r.codec == c)
+                .unwrap()
+        };
+        let low = cfg.network.low_mbps;
+        let fp32 = at(low, TransferCodec::Fp32);
+        let int8 = at(low, TransferCodec::Int8);
+        // At its own optimum, the quantised plan beats shipping raw fp32
+        // end to end, and its compression reflects the 4x + header model.
+        assert!(int8.total_s < fp32.total_s);
+        assert!((fp32.compression - 1.0).abs() < 1e-12);
+        assert!(int8.compression > 3.0);
     }
 
     #[test]

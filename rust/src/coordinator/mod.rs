@@ -27,7 +27,7 @@ pub mod switching;
 
 pub use monitor::{BandwidthChange, NetworkMonitor, TriggerPolicy};
 pub use pause_resume::PauseResume;
-pub use pipeline::{EdgeCloudEnv, InferenceReport, Pipeline, Placement};
+pub use pipeline::{EdgeCloudEnv, InferenceReport, Pipeline, Placement, TransferReport};
 pub use planner::{PartitionPlan, Planner};
 pub use router::{RouteOutcome, Router};
 pub use runner::{PipelinedRunner, StageMode};

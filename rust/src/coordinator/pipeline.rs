@@ -3,13 +3,15 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::clock::Clock;
+use crate::codec::{self, TransferCodec};
 use crate::container::{Container, ContainerHost};
+use crate::metrics::CodecStats;
 use crate::models::ModelManifest;
 use crate::netsim::Link;
 use crate::runtime::{
@@ -77,13 +79,43 @@ pub struct InferenceReport {
     /// Per-layer execution times inside the cloud chain, in chain order
     /// (layer j is manifest layer `split + j`).
     pub cloud_per_layer: Vec<Duration>,
+    /// Real (wall-clock) time spent encoding the intermediate for the wire
+    /// and decoding it cloud-side. Zero for the [`TransferCodec::Fp32`]
+    /// identity codec, which never touches the tensor bytes.
+    pub t_encode: Duration,
+    pub t_decode: Duration,
+    /// Raw fp32 bytes of the split tensor vs the bytes actually priced on
+    /// the link.
+    pub raw_bytes: usize,
+    pub wire_bytes: usize,
+    pub codec: TransferCodec,
     pub output: Literal,
 }
 
 impl InferenceReport {
     pub fn total(&self) -> Duration {
-        self.t_edge + self.t_transfer + self.t_cloud
+        self.t_edge + self.t_encode + self.t_transfer + self.t_decode + self.t_cloud
     }
+
+    /// Raw-to-wire size ratio for this frame (1.0 for empty payloads).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+}
+
+/// What one uplink hand-off cost: codec timings plus the link charge.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferReport {
+    pub codec: TransferCodec,
+    pub t_transfer: Duration,
+    pub t_encode: Duration,
+    pub t_decode: Duration,
+    pub raw_bytes: usize,
+    pub wire_bytes: usize,
 }
 
 /// A live edge-cloud pipeline executing DNN partitions at one split point.
@@ -97,6 +129,13 @@ pub struct Pipeline {
     pub edge_container: Arc<Container>,
     pub cloud_container: Arc<Container>,
     pub init_stats: InitStats,
+    /// How the intermediate tensor is packed for the uplink.
+    pub codec: TransferCodec,
+    /// Chunk size for [`Link::transfer_chunked`] — bounds how stale a
+    /// bandwidth change can go before the remaining payload is repriced.
+    pub chunk_bytes: usize,
+    /// Cumulative codec counters over this pipeline's frames.
+    pub codec_stats: CodecStats,
     state: Mutex<PipelineState>,
 }
 
@@ -139,18 +178,65 @@ impl Pipeline {
 
         // Ship the split tensor over the shaped uplink. Split 0 ships the
         // raw frame, split N ships the final output back (tiny).
-        let t_transfer = self.link.transfer(literal_bytes(&intermediate));
+        let (cloud_input, xfer) = self.ship(intermediate)?;
 
-        let (output, cloud_t) = self.cloud_chain.run(&intermediate, &self.clock)?;
+        let (output, cloud_t) = self.cloud_chain.run(&cloud_input, &self.clock)?;
 
         Ok(InferenceReport {
             t_edge: edge_t.total,
-            t_transfer,
+            t_transfer: xfer.t_transfer,
             t_cloud: cloud_t.total,
             edge_per_layer: edge_t.per_layer,
             cloud_per_layer: cloud_t.per_layer,
+            t_encode: xfer.t_encode,
+            t_decode: xfer.t_decode,
+            raw_bytes: xfer.raw_bytes,
+            wire_bytes: xfer.wire_bytes,
+            codec: xfer.codec,
             output,
         })
+    }
+
+    /// Encode the split tensor with this pipeline's codec, charge the link
+    /// for the *wire* bytes (chunked, so scheduled bandwidth changes
+    /// reprice the remaining payload), and decode cloud-side. Returns the
+    /// literal the cloud chain must consume — for [`TransferCodec::Fp32`]
+    /// it is the untouched input (bitwise-identical fast path); for lossy
+    /// codecs it carries the quantisation round-trip.
+    pub fn ship(&self, intermediate: Literal) -> Result<(Literal, TransferReport)> {
+        let raw_bytes = literal_bytes(&intermediate);
+        if self.codec == TransferCodec::Fp32 {
+            let t_transfer = self.link.transfer_chunked(raw_bytes, self.chunk_bytes);
+            let rep = TransferReport {
+                codec: self.codec,
+                t_transfer,
+                t_encode: Duration::ZERO,
+                t_decode: Duration::ZERO,
+                raw_bytes,
+                wire_bytes: raw_bytes,
+            };
+            self.codec_stats
+                .record(rep.raw_bytes, rep.wire_bytes, rep.t_encode, rep.t_decode);
+            return Ok((intermediate, rep));
+        }
+        let t0 = Instant::now();
+        let enc = codec::encode_literal(self.codec, &intermediate)?;
+        let t_encode = t0.elapsed();
+        let wire_bytes = enc.wire_bytes();
+        let t_transfer = self.link.transfer_chunked(wire_bytes, self.chunk_bytes);
+        let t1 = Instant::now();
+        let decoded = codec::decode_literal(&enc)?;
+        let t_decode = t1.elapsed();
+        let rep = TransferReport {
+            codec: self.codec,
+            t_transfer,
+            t_encode,
+            t_decode,
+            raw_bytes,
+            wire_bytes,
+        };
+        self.codec_stats.record(raw_bytes, wire_bytes, t_encode, t_decode);
+        Ok((decoded, rep))
     }
 
     /// Wire a pipeline directly from parts, with zeroed init stats, in the
@@ -177,6 +263,9 @@ impl Pipeline {
             edge_container,
             cloud_container,
             init_stats: InitStats::default(),
+            codec: TransferCodec::from_env(),
+            chunk_bytes: crate::netsim::default_chunk_bytes(),
+            codec_stats: CodecStats::default(),
             state: Mutex::new(PipelineState::Initialising),
         }
     }
@@ -285,6 +374,21 @@ impl EdgeCloudEnv {
         placement: Placement,
         use_cache: bool,
     ) -> Result<Pipeline> {
+        self.build_pipeline_with(
+            split,
+            placement,
+            BuildOptions { use_cache, ..Default::default() },
+        )
+    }
+
+    /// [`Self::build_pipeline`] with full [`BuildOptions`] control — the
+    /// transfer codec chosen there follows the pipeline for life.
+    pub fn build_pipeline_with(
+        &self,
+        split: usize,
+        placement: Placement,
+        opts: BuildOptions,
+    ) -> Result<Pipeline> {
         anyhow::ensure!(
             split <= self.manifest.num_layers(),
             "split {split} out of range"
@@ -315,7 +419,6 @@ impl EdgeCloudEnv {
         // weights. The two chains live on different domains (different
         // PJRT clients), so they build concurrently — the edge and cloud
         // servers initialise in parallel in the paper's testbed too.
-        let opts = BuildOptions { use_cache, ..Default::default() };
         let n = self.manifest.num_layers();
         let t_load = self.clock.now();
         let (edge_chain, cloud_chain) = if opts.parallel {
@@ -389,6 +492,9 @@ impl EdgeCloudEnv {
             },
             edge_chain,
             cloud_chain,
+            codec: opts.transfer_codec,
+            chunk_bytes: crate::netsim::default_chunk_bytes(),
+            codec_stats: CodecStats::default(),
             state: Mutex::new(PipelineState::Initialising),
         })
     }

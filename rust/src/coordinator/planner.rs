@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::codec::TransferCodec;
 use crate::profiler::{LatencyBreakdown, ModelProfile};
 
 /// New partition metadata for a pipeline.
@@ -21,11 +22,20 @@ pub struct Planner {
     profile: ModelProfile,
     latency: Duration,
     edge_cpu_avail: f64,
+    /// Transfer codec the pipelines will ship with — the Equation-1
+    /// transfer term must be costed at *encoded* bytes or the planner
+    /// optimises a payload nobody sends.
+    codec: TransferCodec,
 }
 
 impl Planner {
     pub fn new(profile: ModelProfile, latency: Duration) -> Self {
-        Planner { profile, latency, edge_cpu_avail: 1.0 }
+        Planner {
+            profile,
+            latency,
+            edge_cpu_avail: 1.0,
+            codec: TransferCodec::from_env(),
+        }
     }
 
     pub fn with_cpu_avail(mut self, avail: f64) -> Self {
@@ -33,16 +43,29 @@ impl Planner {
         self
     }
 
+    /// Plan against a specific transfer codec (overrides the env default).
+    pub fn with_codec(mut self, codec: TransferCodec) -> Self {
+        self.codec = codec;
+        self
+    }
+
     /// Optimal split for the given bandwidth.
     pub fn plan(&self, bandwidth_mbps: f64) -> PartitionPlan {
-        let split = self
-            .profile
-            .optimal_split(bandwidth_mbps, self.latency, self.edge_cpu_avail);
+        let split = self.profile.optimal_split_coded(
+            bandwidth_mbps,
+            self.latency,
+            self.edge_cpu_avail,
+            self.codec,
+        );
         PartitionPlan {
             split,
-            predicted: self
-                .profile
-                .breakdown(split, bandwidth_mbps, self.latency, self.edge_cpu_avail),
+            predicted: self.profile.breakdown_coded(
+                split,
+                bandwidth_mbps,
+                self.latency,
+                self.edge_cpu_avail,
+                self.codec,
+            ),
         }
     }
 
@@ -59,6 +82,10 @@ impl Planner {
 
     pub fn latency(&self) -> Duration {
         self.latency
+    }
+
+    pub fn codec(&self) -> TransferCodec {
+        self.codec
     }
 }
 
@@ -77,6 +104,7 @@ mod tests {
                 edge_time: Duration::from_millis(20),
                 cloud_time: Duration::from_millis(4),
                 output_bytes: 800_000 >> i,
+                ..Default::default()
             })
             .collect();
         ModelProfile { model: "toy".into(), input_bytes: 1_600_000, layers }
@@ -107,6 +135,31 @@ mod tests {
         let low = p.plan(0.5);
         assert!(low.split >= high.split, "{} >= {}", low.split, high.split);
         assert!(p.should_repartition(high.split, 0.5).is_some());
+    }
+
+    #[test]
+    fn codec_choice_moves_the_planned_split() {
+        // At 5 Mbps the fp32 planner hides deep in the network to shrink
+        // the payload; quartered int8 transfers let it cut earlier and
+        // lean on the 5x faster cloud. (We assert direction, not the exact
+        // int8 split — two splits tie to within Duration rounding.)
+        let lat = Duration::from_millis(20);
+        let fp32 = Planner::new(profile(), lat).with_codec(TransferCodec::Fp32);
+        let int8 = Planner::new(profile(), lat).with_codec(TransferCodec::Int8);
+        assert_eq!(int8.codec(), TransferCodec::Int8);
+        let fp32_plan = fp32.plan(5.0);
+        let int8_plan = int8.plan(5.0);
+        assert!(
+            int8_plan.split < fp32_plan.split,
+            "int8 split {} should be earlier than fp32 split {}",
+            int8_plan.split,
+            fp32_plan.split
+        );
+        // Switching codecs at the same bandwidth is itself a repartition
+        // trigger: the int8 planner wants away from the fp32 optimum.
+        assert!(int8.should_repartition(fp32_plan.split, 5.0).is_some());
+        // And the coded optimum beats the raw-fp32 optimum end to end.
+        assert!(int8_plan.predicted.total() < fp32_plan.predicted.total());
     }
 
     #[test]

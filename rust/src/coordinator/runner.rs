@@ -46,7 +46,7 @@ use xla::Literal;
 
 use crate::runtime::ChainTiming;
 
-use super::pipeline::{InferenceReport, Pipeline};
+use super::pipeline::{InferenceReport, Pipeline, TransferReport};
 
 /// Default number of in-flight intermediates per stage hand-off.
 pub const DEFAULT_DEPTH: usize = 2;
@@ -156,12 +156,14 @@ impl PipelinedRunner {
                     Err(_) => break,
                 };
                 let (intermediate, edge_t) = staged?;
-                let t_transfer = pipeline.link.transfer(intermediate.size_bytes());
+                let (cloud_input, xfer) = pipeline
+                    .ship(intermediate)
+                    .with_context(|| format!("transfer stage failed at frame {i}"))?;
                 let (output, cloud_t) = pipeline
                     .cloud_chain
-                    .run(&intermediate, &pipeline.clock)
+                    .run(&cloud_input, &pipeline.clock)
                     .with_context(|| format!("cloud stage failed at frame {i}"))?;
-                reports.push(report(edge_t, t_transfer, cloud_t, output));
+                reports.push(report(edge_t, xfer, cloud_t, output));
             }
             drop(rx);
             producer.join().map_err(|_| anyhow!("edge stage panicked"))
@@ -178,7 +180,7 @@ impl PipelinedRunner {
     ) -> Result<Vec<InferenceReport>> {
         let (edge_tx, edge_rx) = sync_channel::<Staged<(Literal, ChainTiming)>>(self.depth);
         let (link_tx, link_rx) =
-            sync_channel::<Staged<(Literal, ChainTiming, std::time::Duration)>>(self.depth);
+            sync_channel::<Staged<(Literal, ChainTiming, TransferReport)>>(self.depth);
         let mut reports = Vec::with_capacity(frames.len());
 
         let (edge_progress, transfer_progress) =
@@ -200,14 +202,17 @@ impl PipelinedRunner {
                 let transfer = s.spawn(move || {
                     let mut shipped = 0usize;
                     while let Ok((i, staged)) = edge_rx.recv() {
-                        // Forward upstream errors untouched; ship the
-                        // intermediate over the FIFO link otherwise. The
-                        // link keeps its own timing authority (queueing +
-                        // serialisation), exactly as in the 2-stage path.
-                        let handoff = staged.map(|(intermediate, edge_t)| {
-                            let t_transfer =
-                                pipeline.link.transfer(intermediate.size_bytes());
-                            (intermediate, edge_t, t_transfer)
+                        // Forward upstream errors untouched; encode + ship
+                        // the intermediate over the FIFO link otherwise.
+                        // The link keeps its own timing authority (queueing
+                        // + serialisation), exactly as in the 2-stage path.
+                        let handoff = staged.and_then(|(intermediate, edge_t)| {
+                            pipeline
+                                .ship(intermediate)
+                                .map(|(cloud_input, xfer)| (cloud_input, edge_t, xfer))
+                                .with_context(|| {
+                                    format!("transfer stage failed at frame {i}")
+                                })
                         });
                         let failed = handoff.is_err();
                         if link_tx.send((i, handoff)).is_err() || failed {
@@ -223,12 +228,12 @@ impl PipelinedRunner {
                         Ok(handoff) => handoff,
                         Err(_) => break,
                     };
-                    let (intermediate, edge_t, t_transfer) = staged?;
+                    let (cloud_input, edge_t, xfer) = staged?;
                     let (output, cloud_t) = pipeline
                         .cloud_chain
-                        .run(&intermediate, &pipeline.clock)
+                        .run(&cloud_input, &pipeline.clock)
                         .with_context(|| format!("cloud stage failed at frame {i}"))?;
-                    reports.push(report(edge_t, t_transfer, cloud_t, output));
+                    reports.push(report(edge_t, xfer, cloud_t, output));
                 }
                 drop(link_rx);
                 let edge_progress =
@@ -250,16 +255,21 @@ impl PipelinedRunner {
 
 fn report(
     edge_t: ChainTiming,
-    t_transfer: std::time::Duration,
+    xfer: TransferReport,
     cloud_t: ChainTiming,
     output: Literal,
 ) -> InferenceReport {
     InferenceReport {
         t_edge: edge_t.total,
-        t_transfer,
+        t_transfer: xfer.t_transfer,
         t_cloud: cloud_t.total,
         edge_per_layer: edge_t.per_layer,
         cloud_per_layer: cloud_t.per_layer,
+        t_encode: xfer.t_encode,
+        t_decode: xfer.t_decode,
+        raw_bytes: xfer.raw_bytes,
+        wire_bytes: xfer.wire_bytes,
+        codec: xfer.codec,
         output,
     }
 }

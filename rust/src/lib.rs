@@ -21,6 +21,7 @@
 
 pub mod bench;
 pub mod clock;
+pub mod codec;
 pub mod config;
 pub mod container;
 pub mod coordinator;

@@ -113,6 +113,63 @@ impl FrameStatsInner {
     }
 }
 
+/// Transfer-codec accounting over a pipeline's lifetime: frames shipped,
+/// raw vs wire bytes, and the host time spent encoding/decoding. The
+/// effective compression ratio is the memory-vs-downtime knob's receipt —
+/// what the uplink was actually spared.
+#[derive(Debug, Default)]
+pub struct CodecStats {
+    inner: Mutex<CodecStatsInner>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CodecStatsInner {
+    pub frames: u64,
+    pub raw_bytes: u64,
+    pub wire_bytes: u64,
+    pub encode_time: Duration,
+    pub decode_time: Duration,
+}
+
+impl CodecStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, raw_bytes: usize, wire_bytes: usize, encode: Duration, decode: Duration) {
+        let mut s = self.inner.lock().unwrap();
+        s.frames += 1;
+        s.raw_bytes += raw_bytes as u64;
+        s.wire_bytes += wire_bytes as u64;
+        s.encode_time += encode;
+        s.decode_time += decode;
+    }
+
+    pub fn snapshot(&self) -> CodecStatsInner {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+impl CodecStatsInner {
+    /// `raw / wire` over everything shipped (1.0 when nothing shipped).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.wire_bytes as f64
+        }
+    }
+
+    /// Mean per-frame codec overhead (encode + decode).
+    pub fn mean_codec_time(&self) -> Duration {
+        if self.frames == 0 {
+            Duration::ZERO
+        } else {
+            (self.encode_time + self.decode_time) / self.frames as u32
+        }
+    }
+}
+
 /// Log-bucketed latency histogram (1 us .. ~100 s), lock-free enough for
 /// the request path via a mutex over u64 buckets (contention is per-frame,
 /// far below PJRT execution cost).
@@ -280,6 +337,21 @@ mod tests {
         assert_eq!(d.phase_prefix_total("edge/"), Duration::from_millis(5));
         assert_eq!(d.phase_prefix_total("cloud/"), Duration::from_millis(12));
         assert_eq!(d.phase_prefix_total("nope/"), Duration::ZERO);
+    }
+
+    #[test]
+    fn codec_stats_accumulate() {
+        let c = CodecStats::new();
+        assert_eq!(c.snapshot().compression_ratio(), 1.0);
+        assert_eq!(c.snapshot().mean_codec_time(), Duration::ZERO);
+        c.record(4000, 1016, Duration::from_micros(30), Duration::from_micros(50));
+        c.record(4000, 1016, Duration::from_micros(10), Duration::from_micros(30));
+        let s = c.snapshot();
+        assert_eq!(s.frames, 2);
+        assert_eq!(s.raw_bytes, 8000);
+        assert_eq!(s.wire_bytes, 2032);
+        assert!((s.compression_ratio() - 8000.0 / 2032.0).abs() < 1e-12);
+        assert_eq!(s.mean_codec_time(), Duration::from_micros(60));
     }
 
     #[test]

@@ -165,6 +165,12 @@ impl ModelManifest {
         }
     }
 
+    /// [`Self::transfer_bytes`] as actually priced on the wire under a
+    /// transfer codec (fp16 halves, int8 quarters + a 16-byte header).
+    pub fn coded_transfer_bytes(&self, split: usize, codec: crate::codec::TransferCodec) -> usize {
+        codec.encoded_bytes(self.transfer_bytes(split))
+    }
+
     pub fn hlo_path(&self, index: usize) -> PathBuf {
         self.dir.join(&self.layers[index].hlo)
     }
@@ -326,6 +332,18 @@ mod tests {
     #[should_panic]
     fn transfer_bytes_rejects_out_of_range() {
         parse_sample().transfer_bytes(3);
+    }
+
+    #[test]
+    fn coded_transfer_bytes_follows_the_wire_model() {
+        use crate::codec::TransferCodec;
+        let m = parse_sample();
+        assert_eq!(m.coded_transfer_bytes(1, TransferCodec::Fp32), 128);
+        assert_eq!(m.coded_transfer_bytes(1, TransferCodec::Fp16), 64);
+        assert_eq!(
+            m.coded_transfer_bytes(1, TransferCodec::Int8),
+            128 / 4 + crate::codec::INT8_HEADER_BYTES
+        );
     }
 
     #[test]

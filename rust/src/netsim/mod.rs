@@ -6,6 +6,15 @@
 //! uplink), and the bandwidth can change at runtime — which is exactly the
 //! event that triggers DNN repartitioning. [`Schedule`] replays a bandwidth
 //! trace against the experiment clock.
+//!
+//! Payloads move in bounded chunks ([`Link::transfer_chunked`];
+//! `NEUKONFIG_CHUNK_BYTES`, default 64 KiB): a bandwidth change scheduled
+//! with [`Link::schedule_bandwidth`] reprices the chunks still unsent when
+//! it fires, instead of the whole payload being costed at submission-time
+//! bandwidth. Consecutive chunks at one bandwidth are costed as a single
+//! segment with the same arithmetic as [`transfer_time`], so a transfer
+//! that sees no rate change is *bitwise-identical* in cost to the
+//! unchunked model.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -26,6 +35,27 @@ struct LinkState {
     busy_until: Duration,
     bytes_sent: u64,
     transfers: u64,
+    chunks: u64,
+    /// Scheduled `(at, mbps)` bandwidth events, time-ordered. Applied when
+    /// the timeline reaches them: at chunk boundaries inside a transfer,
+    /// and on any state read that knows the current time.
+    pending: Vec<(Duration, f64)>,
+}
+
+impl LinkState {
+    /// Apply every scheduled bandwidth event due at or before `at`.
+    fn apply_pending(&mut self, at: Duration) {
+        let due = self.pending.iter().take_while(|e| e.0 <= at).count();
+        for (_, mbps) in self.pending.drain(..due) {
+            self.bandwidth_mbps = mbps;
+        }
+    }
+}
+
+/// Serialisation seconds for `bytes` at `mbps` — the exact expression
+/// [`transfer_time`] uses, shared so segment costing stays bit-identical.
+fn seg_secs(bytes: usize, mbps: f64) -> f64 {
+    (bytes as f64 * 8.0) / (mbps * 1e6)
 }
 
 impl Link {
@@ -38,45 +68,102 @@ impl Link {
                 busy_until: Duration::ZERO,
                 bytes_sent: 0,
                 transfers: 0,
+                chunks: 0,
+                pending: Vec::new(),
             }),
             clock,
         }
     }
 
     /// Pure transfer-time model (Equation 1's T_t term): latency + payload
-    /// serialisation at the current bandwidth. No side effects.
+    /// serialisation at the current bandwidth. Applies any scheduled
+    /// bandwidth events that are already due; no other side effects.
     pub fn transfer_time(&self, bytes: usize) -> Duration {
-        let s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap();
+        s.apply_pending(self.clock.now());
         transfer_time(bytes, s.bandwidth_mbps, s.latency)
     }
 
     /// Perform a transfer on the experiment timeline: waits for the uplink
     /// to be free (FIFO), then for the serialisation + latency. Returns the
-    /// total time this transfer experienced (queueing included).
+    /// total time this transfer experienced (queueing included). Ships in
+    /// chunks of [`default_chunk_bytes`].
     pub fn transfer(&self, bytes: usize) -> Duration {
+        self.transfer_chunked(bytes, default_chunk_bytes())
+    }
+
+    /// [`Self::transfer`] with an explicit chunk size. The payload
+    /// serialises chunk by chunk; a bandwidth event scheduled with
+    /// [`Self::schedule_bandwidth`] reprices every chunk that starts at or
+    /// after the event fires (today's rate for today's bytes — the
+    /// stale-bandwidth fix). Chunks between two events collapse into one
+    /// costing segment using [`transfer_time`]'s arithmetic, so with a
+    /// constant bandwidth the cost is bit-identical to the unchunked model.
+    pub fn transfer_chunked(&self, bytes: usize, chunk_bytes: usize) -> Duration {
+        let chunk = chunk_bytes.max(1);
         let (wait, cost) = {
             let mut s = self.state.lock().unwrap();
             let now = self.clock.now();
             let start = s.busy_until.max(now);
-            let cost = transfer_time(bytes, s.bandwidth_mbps, s.latency);
+            // Serialisation begins once the propagation latency has passed.
+            let ser_start = start + s.latency;
+            s.apply_pending(ser_start);
+            let n_chunks = if bytes == 0 { 0 } else { bytes.div_ceil(chunk) };
+            let mut done_secs = 0.0f64; // serialisation of closed segments
+            let mut seg_bytes = 0usize; // bytes in the open segment
+            let mut seg_bw = s.bandwidth_mbps;
+            let mut sent = 0usize;
+            for _ in 0..n_chunks {
+                // Instant this chunk starts serialising; fire any events
+                // due by then and close the segment if the rate moved.
+                let at = ser_start
+                    + Duration::from_secs_f64(done_secs + seg_secs(seg_bytes, seg_bw));
+                s.apply_pending(at);
+                if s.bandwidth_mbps != seg_bw {
+                    done_secs += seg_secs(seg_bytes, seg_bw);
+                    seg_bytes = 0;
+                    seg_bw = s.bandwidth_mbps;
+                }
+                let this = chunk.min(bytes - sent);
+                seg_bytes += this;
+                sent += this;
+            }
+            done_secs += seg_secs(seg_bytes, seg_bw);
+            let cost = s.latency + Duration::from_secs_f64(done_secs);
             s.busy_until = start + cost;
             s.bytes_sent += bytes as u64;
             s.transfers += 1;
+            s.chunks += n_chunks as u64;
             (start - now, cost)
         };
         self.clock.sleep(wait + cost);
         wait + cost
     }
 
-    /// Change the shaped bandwidth (the `tc` rate update that triggers
-    /// repartitioning).
+    /// Change the shaped bandwidth immediately (the `tc` rate update that
+    /// triggers repartitioning). Transfers already costed keep their price;
+    /// use [`Self::schedule_bandwidth`] to reprice a transfer mid-flight on
+    /// the simulated timeline.
     pub fn set_bandwidth(&self, mbps: f64) {
         assert!(mbps > 0.0);
         self.state.lock().unwrap().bandwidth_mbps = mbps;
     }
 
+    /// Schedule a bandwidth change at timeline instant `at`. Chunked
+    /// transfers whose chunks start at or after `at` pay the new rate —
+    /// deterministic mid-transfer repricing even on a simulated clock,
+    /// where a whole transfer is costed inside one lock.
+    pub fn schedule_bandwidth(&self, at: Duration, mbps: f64) {
+        assert!(mbps > 0.0);
+        let mut s = self.state.lock().unwrap();
+        s.pending.push((at, mbps));
+        s.pending.sort_by_key(|e| e.0);
+    }
+
     pub fn bandwidth_mbps(&self) -> f64 {
-        self.state.lock().unwrap().bandwidth_mbps
+        let mut s = self.state.lock().unwrap();
+        s.apply_pending(self.clock.now());
+        s.bandwidth_mbps
     }
 
     pub fn latency(&self) -> Duration {
@@ -90,6 +177,25 @@ impl Link {
     pub fn transfers(&self) -> u64 {
         self.state.lock().unwrap().transfers
     }
+
+    /// Total chunks shipped across all transfers.
+    pub fn chunks(&self) -> u64 {
+        self.state.lock().unwrap().chunks
+    }
+}
+
+/// Default transfer chunk size: `NEUKONFIG_CHUNK_BYTES`, falling back to
+/// 64 KiB (unset, unparsable, or <= 0 all mean the default).
+pub fn default_chunk_bytes() -> usize {
+    parse_chunk_bytes(std::env::var("NEUKONFIG_CHUNK_BYTES").ok().as_deref())
+}
+
+pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
+
+fn parse_chunk_bytes(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|b| *b > 0)
+        .unwrap_or(DEFAULT_CHUNK_BYTES)
 }
 
 /// latency + bytes*8/bandwidth — shared by the live link and the analytic
@@ -190,6 +296,78 @@ mod tests {
     fn zero_bytes_costs_latency_only() {
         let l = sim_link(20.0);
         assert_eq!(l.transfer_time(0), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn chunked_cost_matches_unchunked_at_constant_bandwidth() {
+        // Segment grouping: with no rate change, any chunk size must cost
+        // bit-identically to the pre-chunking model.
+        let expect = transfer_time(1_000_000, 20.0, Duration::from_millis(20));
+        for chunk in [1_000_000, 65_536, 4096, 1_000_001, 1] {
+            let l = sim_link(20.0);
+            assert_eq!(l.transfer_chunked(1_000_000, chunk), expect, "chunk {chunk}");
+        }
+        let l = sim_link(20.0);
+        assert_eq!(l.transfer(1_000_000), expect);
+        l.transfer_chunked(1_000_000, 4096);
+        assert_eq!(l.chunks(), 1_000_000usize.div_ceil(DEFAULT_CHUNK_BYTES) as u64 + 245);
+        assert_eq!(l.transfers(), 2);
+    }
+
+    #[test]
+    fn scheduled_rate_drop_reprices_remaining_chunks() {
+        // Regression (stale-bandwidth costing): 2 MB at 8 Mbps is 2 s when
+        // the whole payload is priced at submission-time bandwidth. With
+        // the rate halving at t = 1 s, the chunks serialised after the
+        // change must pay 4 Mbps: 16 x 64 KiB chunks (1,048,576 B) fit
+        // before the event, the remaining 951,424 B cost twice as much —
+        // ~2.951 s total.
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 8.0, Duration::ZERO);
+        l.schedule_bandwidth(Duration::from_secs(1), 4.0);
+        let t = l.transfer_chunked(2_000_000, 65_536);
+        assert!(
+            t > Duration::from_secs(2),
+            "transfer still priced at the stale submission bandwidth: {t:?}"
+        );
+        assert!(
+            t >= Duration::from_secs_f64(2.9) && t <= Duration::from_secs_f64(3.0),
+            "repriced cost off the chunk-granular model: {t:?}"
+        );
+        // The event has fired; later reads and transfers see 4 Mbps.
+        assert_eq!(l.bandwidth_mbps(), 4.0);
+    }
+
+    #[test]
+    fn scheduled_event_before_start_covers_whole_transfer() {
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 8.0, Duration::ZERO);
+        l.schedule_bandwidth(Duration::ZERO, 4.0);
+        // 1 MB entirely at the new 4 Mbps rate: 2 s exactly.
+        let t = l.transfer_chunked(1_000_000, 65_536);
+        assert_eq!(t, transfer_time(1_000_000, 4.0, Duration::ZERO));
+    }
+
+    #[test]
+    fn scheduled_rate_rise_cheapens_the_tail() {
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 4.0, Duration::ZERO);
+        // 2 MB at 4 Mbps is 4 s flat; doubling the rate at t = 1 s leaves
+        // ~1.5 MB to serialise at 8 Mbps: ~2.5 s total.
+        l.schedule_bandwidth(Duration::from_secs(1), 8.0);
+        let t = l.transfer_chunked(2_000_000, 65_536);
+        assert!(t < Duration::from_secs(3), "tail not repriced upward: {t:?}");
+        assert!(t > Duration::from_secs(2), "{t:?}");
+    }
+
+    #[test]
+    fn chunk_bytes_parsing() {
+        assert_eq!(parse_chunk_bytes(None), DEFAULT_CHUNK_BYTES);
+        assert_eq!(parse_chunk_bytes(Some("")), DEFAULT_CHUNK_BYTES);
+        assert_eq!(parse_chunk_bytes(Some("nope")), DEFAULT_CHUNK_BYTES);
+        assert_eq!(parse_chunk_bytes(Some("0")), DEFAULT_CHUNK_BYTES);
+        assert_eq!(parse_chunk_bytes(Some("4096")), 4096);
+        assert_eq!(parse_chunk_bytes(Some(" 128 ")), 128);
     }
 
     #[test]

@@ -12,12 +12,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::codec::TransferCodec;
 use crate::models::ModelManifest;
 use crate::netsim::transfer_time;
 use crate::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
 
 /// Profile of one partition unit.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LayerProfile {
     pub index: usize,
     pub name: String,
@@ -25,6 +26,11 @@ pub struct LayerProfile {
     pub edge_time: Duration,
     pub cloud_time: Duration,
     pub output_bytes: usize,
+    /// How many measured frames have been folded into `edge_time` /
+    /// `cloud_time` (0 = pure analytic prior). Lets callers judge how much
+    /// to trust an estimate before repartitioning on it.
+    pub edge_observations: u64,
+    pub cloud_observations: u64,
 }
 
 /// Equation-1 latency breakdown for one split point.
@@ -64,6 +70,7 @@ impl ModelProfile {
                 edge_time: Duration::from_secs_f64(l.flops as f64 / (edge_gflops * 1e9)),
                 cloud_time: Duration::from_secs_f64(l.flops as f64 / (cloud_gflops * 1e9)),
                 output_bytes: l.output_bytes,
+                ..Default::default()
             })
             .collect();
         ModelProfile {
@@ -73,14 +80,42 @@ impl ModelProfile {
         }
     }
 
+    /// Raw f32 bytes crossing the network at split `k` (`k = 0` ships the
+    /// input frame, `k = N` ships the final output).
+    pub fn cut_bytes(&self, split: usize) -> usize {
+        assert!(split <= self.layers.len());
+        if split == 0 {
+            self.input_bytes
+        } else {
+            self.layers[split - 1].output_bytes
+        }
+    }
+
     /// Equation 1 for split `k`: edge runs `[0,k)`, transfer of the split
     /// tensor, cloud runs `[k,N)`. CPU availability divides edge speed.
+    /// Transfer is costed at the raw (fp32) payload.
     pub fn breakdown(
         &self,
         split: usize,
         bandwidth_mbps: f64,
         latency: Duration,
         edge_cpu_avail: f64,
+    ) -> LatencyBreakdown {
+        self.breakdown_coded(split, bandwidth_mbps, latency, edge_cpu_avail, TransferCodec::Fp32)
+    }
+
+    /// [`Self::breakdown`] with the transfer term costed at the codec's
+    /// *encoded* bytes-per-cut. The codec must be visible here, not bolted
+    /// on after planning: quartering the payload moves the Equation-1
+    /// optimum (usually to an earlier split, because cheap transfers favour
+    /// offloading compute to the faster cloud).
+    pub fn breakdown_coded(
+        &self,
+        split: usize,
+        bandwidth_mbps: f64,
+        latency: Duration,
+        edge_cpu_avail: f64,
+        codec: TransferCodec,
     ) -> LatencyBreakdown {
         assert!(split <= self.layers.len());
         let edge: Duration = self.layers[..split]
@@ -89,11 +124,7 @@ impl ModelProfile {
             .sum::<Duration>()
             .mul_f64(1.0 / edge_cpu_avail.max(1e-6));
         let cloud: Duration = self.layers[split..].iter().map(|l| l.cloud_time).sum();
-        let bytes = if split == 0 {
-            self.input_bytes
-        } else {
-            self.layers[split - 1].output_bytes
-        };
+        let bytes = codec.encoded_bytes(self.cut_bytes(split));
         LatencyBreakdown {
             split,
             edge,
@@ -104,8 +135,22 @@ impl ModelProfile {
 
     /// The optimal split point under the given conditions (argmin of Eq 1).
     pub fn optimal_split(&self, bandwidth_mbps: f64, latency: Duration, edge_cpu: f64) -> usize {
+        self.optimal_split_coded(bandwidth_mbps, latency, edge_cpu, TransferCodec::Fp32)
+    }
+
+    /// Argmin of Equation 1 with codec-encoded transfer bytes.
+    pub fn optimal_split_coded(
+        &self,
+        bandwidth_mbps: f64,
+        latency: Duration,
+        edge_cpu: f64,
+        codec: TransferCodec,
+    ) -> usize {
         (0..=self.layers.len())
-            .min_by_key(|&k| self.breakdown(k, bandwidth_mbps, latency, edge_cpu).total())
+            .min_by_key(|&k| {
+                self.breakdown_coded(k, bandwidth_mbps, latency, edge_cpu, codec)
+                    .total()
+            })
             .unwrap()
     }
 
@@ -113,11 +158,12 @@ impl ModelProfile {
     /// `edge_per_layer`/`cloud_per_layer` straight from an
     /// [`InferenceReport`] taken at split `split` (edge entry j is manifest
     /// layer j; cloud entry j is layer `split + j`). Each covered layer's
-    /// estimate moves to the midpoint of old and observed — an equal-weight
-    /// blend, so one noisy frame can't wipe out the analytic prior and
-    /// repeated observations converge on the measured value. Entries past
-    /// the profile tail are ignored. Returns how many layer estimates were
-    /// updated.
+    /// estimate moves by an exponentially-weighted moving average with the
+    /// `NEUKONFIG_PROFILE_ALPHA` weight (default 0.3): low alpha distrusts
+    /// a single noisy frame, repeated observations still converge on the
+    /// measured value. Per-layer observation counts are bumped alongside.
+    /// Entries past the profile tail are ignored. Returns how many layer
+    /// estimates were updated.
     ///
     /// [`InferenceReport`]: crate::coordinator::InferenceReport
     pub fn apply_observation(
@@ -126,15 +172,31 @@ impl ModelProfile {
         edge_per_layer: &[Duration],
         cloud_per_layer: &[Duration],
     ) -> usize {
+        self.apply_observation_alpha(split, edge_per_layer, cloud_per_layer, default_profile_alpha())
+    }
+
+    /// [`Self::apply_observation`] with an explicit EWMA weight (clamped to
+    /// (0, 1]; 0.5 reproduces the historical midpoint blend, 1.0 trusts the
+    /// newest frame entirely).
+    pub fn apply_observation_alpha(
+        &mut self,
+        split: usize,
+        edge_per_layer: &[Duration],
+        cloud_per_layer: &[Duration],
+        alpha: f64,
+    ) -> usize {
+        let alpha = alpha.clamp(f64::MIN_POSITIVE, 1.0);
         let mut updated = 0;
         for (j, d) in edge_per_layer.iter().enumerate().take(split.min(self.layers.len())) {
-            let t = &mut self.layers[j].edge_time;
-            *t = (*t + *d) / 2;
+            let l = &mut self.layers[j];
+            l.edge_time = ewma(l.edge_time, *d, alpha);
+            l.edge_observations += 1;
             updated += 1;
         }
         for (j, d) in cloud_per_layer.iter().enumerate() {
             let Some(layer) = self.layers.get_mut(split + j) else { break };
-            layer.cloud_time = (layer.cloud_time + *d) / 2;
+            layer.cloud_time = ewma(layer.cloud_time, *d, alpha);
+            layer.cloud_observations += 1;
             updated += 1;
         }
         updated
@@ -151,6 +213,26 @@ impl ModelProfile {
             .map(|k| self.breakdown(k, bandwidth_mbps, latency, edge_cpu))
             .collect()
     }
+}
+
+/// `old * (1 - alpha) + observed * alpha`.
+fn ewma(old: Duration, observed: Duration, alpha: f64) -> Duration {
+    old.mul_f64(1.0 - alpha) + observed.mul_f64(alpha)
+}
+
+/// Default EWMA weight for profile updates.
+pub const DEFAULT_PROFILE_ALPHA: f64 = 0.3;
+
+/// EWMA weight from `NEUKONFIG_PROFILE_ALPHA` (must be a finite value in
+/// (0, 1]; anything else falls back to [`DEFAULT_PROFILE_ALPHA`]).
+pub fn default_profile_alpha() -> f64 {
+    parse_profile_alpha(std::env::var("NEUKONFIG_PROFILE_ALPHA").ok().as_deref())
+}
+
+fn parse_profile_alpha(raw: Option<&str>) -> f64 {
+    raw.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|a| a.is_finite() && *a > 0.0 && *a <= 1.0)
+        .unwrap_or(DEFAULT_PROFILE_ALPHA)
 }
 
 /// Calibrated analytic profile for a known model.
@@ -216,6 +298,7 @@ pub fn measure(
             edge_time: edge_best.mul_f64(1.0 / edge.cpu_scale().max(1e-6)),
             cloud_time: cloud_best.mul_f64(1.0 / cloud.cpu_scale().max(1e-6)),
             output_bytes: lm.output_bytes,
+            ..Default::default()
         });
         cur = e.run(&cur)?;
     }
@@ -244,6 +327,7 @@ mod tests {
                 edge_time: Duration::from_millis(ms),
                 cloud_time: Duration::from_millis(ms / 5),
                 output_bytes: out,
+                ..Default::default()
             });
         }
         ModelProfile { model: "toy".into(), input_bytes: 2_000_000, layers }
@@ -311,14 +395,25 @@ mod tests {
         let cloud_obs = vec![Duration::from_millis(3)];
         let updated = p.apply_observation(2, &edge_obs, &cloud_obs);
         assert_eq!(updated, 3);
-        // Midpoint of 30 ms prior and 60 ms observed.
-        assert_eq!(p.layers[0].edge_time, Duration::from_millis(45));
-        assert_eq!(p.layers[1].edge_time, Duration::from_millis(45));
-        // cloud_time prior for layer 2 is 30/5 = 6 ms; midpoint with 3 ms.
-        assert_eq!(p.layers[2].cloud_time, Duration::from_micros(4500));
+        // EWMA at the default alpha 0.3: 30 * 0.7 + 60 * 0.3 = 39 ms (tiny
+        // tolerance for Duration::mul_f64 nanosecond rounding).
+        let close = |got: Duration, want: Duration| {
+            got.max(want) - got.min(want) < Duration::from_nanos(100)
+        };
+        assert!(close(p.layers[0].edge_time, Duration::from_millis(39)));
+        assert!(close(p.layers[1].edge_time, Duration::from_millis(39)));
+        // cloud_time prior for layer 2 is 6 ms: 6 * 0.7 + 3 * 0.3 = 5.1 ms.
+        assert!(close(p.layers[2].cloud_time, Duration::from_micros(5100)));
+        // Observation counters track covered layers only.
+        assert_eq!(p.layers[0].edge_observations, 1);
+        assert_eq!(p.layers[1].edge_observations, 1);
+        assert_eq!(p.layers[2].cloud_observations, 1);
+        assert_eq!(p.layers[2].edge_observations, 0);
+        assert_eq!(p.layers[3].cloud_observations, 0);
         // Untouched layers keep their priors.
         assert_eq!(p.layers[3].cloud_time, Duration::from_millis(6));
-        // Converges on the measured value with repetition.
+        // Converges on the measured value with repetition: the 30 ms gap
+        // decays by 0.7 per frame, 30 ms * 0.7^21 < 100 us.
         for _ in 0..20 {
             p.apply_observation(2, &edge_obs, &cloud_obs);
         }
@@ -326,6 +421,65 @@ mod tests {
         let want = Duration::from_millis(60);
         let err = got.max(want) - got.min(want);
         assert!(err < Duration::from_micros(100), "did not converge: {err:?}");
+        assert_eq!(p.layers[0].edge_observations, 21);
+    }
+
+    #[test]
+    fn observation_alpha_half_is_the_midpoint_blend() {
+        let mut p = cnn_like();
+        let edge_obs = vec![Duration::from_millis(60)];
+        p.apply_observation_alpha(1, &edge_obs, &[], 0.5);
+        assert_eq!(p.layers[0].edge_time, Duration::from_millis(45));
+        // alpha 1.0 adopts the observation outright.
+        p.apply_observation_alpha(1, &edge_obs, &[], 1.0);
+        assert_eq!(p.layers[0].edge_time, Duration::from_millis(60));
+    }
+
+    #[test]
+    fn profile_alpha_parsing() {
+        assert_eq!(parse_profile_alpha(None), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("nope")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("0")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("-0.3")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("1.5")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("inf")), DEFAULT_PROFILE_ALPHA);
+        assert_eq!(parse_profile_alpha(Some("0.5")), 0.5);
+        assert_eq!(parse_profile_alpha(Some(" 1 ")), 1.0);
+    }
+
+    #[test]
+    fn coded_breakdown_shrinks_only_the_transfer_term() {
+        let p = cnn_like();
+        let raw = p.breakdown(3, 20.0, Duration::from_millis(20), 1.0);
+        let coded =
+            p.breakdown_coded(3, 20.0, Duration::from_millis(20), 1.0, TransferCodec::Int8);
+        assert_eq!(coded.edge, raw.edge);
+        assert_eq!(coded.cloud, raw.cloud);
+        assert!(coded.transfer < raw.transfer);
+        let expect = transfer_time(
+            TransferCodec::Int8.encoded_bytes(p.cut_bytes(3)),
+            20.0,
+            Duration::from_millis(20),
+        );
+        assert_eq!(coded.transfer, expect);
+        // Fp32 is the identity codec.
+        let fp32 =
+            p.breakdown_coded(3, 20.0, Duration::from_millis(20), 1.0, TransferCodec::Fp32);
+        assert_eq!(fp32, raw);
+    }
+
+    #[test]
+    fn int8_codec_moves_the_optimal_split_earlier() {
+        // Quartered transfers make shipping out early (to the 5x faster
+        // cloud) cheap: the Equation-1 optimum moves to an earlier split.
+        let p = cnn_like();
+        let bw = 20.0;
+        let lat = Duration::from_millis(20);
+        let fp32 = p.optimal_split(bw, lat, 1.0);
+        let int8 = p.optimal_split_coded(bw, lat, 1.0, TransferCodec::Int8);
+        assert_ne!(int8, fp32, "codec must be visible to the planner");
+        assert!(int8 < fp32, "int8 optimum {int8} vs fp32 optimum {fp32}");
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub struct BuildOptions {
     /// smaller cache means lower steady-state edge memory, but repartitions
     /// re-pay weight uploads for evicted layers.
     pub weight_cache_mb: Option<f64>,
+    /// Activation-transfer codec for the edge->cloud hand-off (defaults
+    /// from `NEUKONFIG_TRANSFER_CODEC`; `Fp32` is the lossless baseline).
+    /// Pipelines built with these options encode the split tensor before
+    /// it enters the shaped link and decode it cloud-side.
+    pub transfer_codec: crate::codec::TransferCodec,
 }
 
 impl Default for BuildOptions {
@@ -55,6 +60,7 @@ impl Default for BuildOptions {
             parallel: default_parallel_bringup(),
             max_workers: 0,
             weight_cache_mb: None,
+            transfer_codec: crate::codec::TransferCodec::from_env(),
         }
     }
 }
@@ -811,6 +817,9 @@ mod tests {
         assert!(o.use_cache);
         assert_eq!(o.max_workers, 0);
         assert_eq!(o.weight_cache_mb, None);
+        // Tests never set NEUKONFIG_TRANSFER_CODEC: the default is the
+        // lossless baseline.
+        assert_eq!(o.transfer_codec, crate::codec::TransferCodec::Fp32);
         let s = BuildOptions::serial(false);
         assert!(!s.parallel);
         assert!(!s.use_cache);

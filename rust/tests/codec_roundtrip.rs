@@ -1,0 +1,206 @@
+//! Property tests for the activation-transfer codec: every codec must obey
+//! its documented contract on random *and* adversarial tensors.
+//!
+//! * `Fp32` — bitwise round trip, always.
+//! * `Fp16` — absolute reconstruction error bounded by
+//!   `|x| * 2^-11 + 3e-8` for inputs within the finite f16 range, overflow
+//!   clamped to ±65504 (never an infinity on the wire), and every finite
+//!   binary16 bit pattern survives an exact decode→encode round trip.
+//! * `Int8` — error bounded by half a quantisation step (plus one f32 ulp
+//!   of the reconstructed magnitude), endpoints and constant tensors exact,
+//!   extreme f32 spans handled without overflow.
+//!
+//! `proptest` is unavailable offline, so cases come from the in-tree
+//! deterministic PRNG; failure messages carry the case coordinates.
+
+use neukonfig::codec::{
+    decode_literal, decode_to_f32s, encode_f32s, encode_literal, f16_bits_to_f32,
+    f32_to_f16_bits, EncodedPayload, TransferCodec, INT8_HEADER_BYTES,
+};
+use neukonfig::runtime::literal_from_f32;
+use neukonfig::util::prng::Prng;
+
+const CASES: usize = 100;
+
+/// Uniform tensor in [lo, hi]. Interpolates in f64 — `hi - lo` can exceed
+/// f32::MAX (e.g. a ±3e38 span), which would overflow `next_f32_range`.
+fn random_tensor(rng: &mut Prng, lo: f32, hi: f32) -> Vec<f32> {
+    let n = 1 + rng.next_below(512);
+    (0..n)
+        .map(|_| (lo as f64 + (hi as f64 - lo as f64) * rng.next_f64()) as f32)
+        .collect()
+}
+
+/// Tensors built to hit codec edge cases: constants, zeros, f32 denormals,
+/// huge spans, single elements, sign flips around zero.
+fn adversarial_tensors() -> Vec<Vec<f32>> {
+    vec![
+        vec![0.0; 64],
+        vec![-0.0; 3],
+        vec![1.25; 200],
+        vec![-7.5],
+        vec![1e-40, 2e-39, 1e-38, -1e-40],
+        vec![-3.0e38, 3.0e38],
+        vec![-1.0, 0.0, 1.0],
+        vec![65504.0, -65504.0, 0.5],
+        vec![f32::MIN_POSITIVE, -f32::MIN_POSITIVE],
+    ]
+}
+
+#[test]
+fn fp32_round_trip_is_bitwise_on_random_and_adversarial_tensors() {
+    let mut rng = Prng::new(0xF32);
+    let mut tensors = adversarial_tensors();
+    for _ in 0..CASES {
+        tensors.push(random_tensor(&mut rng, -3.0e38, 3.0e38));
+    }
+    for (case, xs) in tensors.iter().enumerate() {
+        let back = decode_to_f32s(&encode_f32s(TransferCodec::Fp32, xs));
+        assert_eq!(back.len(), xs.len(), "case {case}: length");
+        for (i, (a, b)) in xs.iter().zip(&back).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} elem {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn fp16_error_stays_within_documented_bound() {
+    let mut rng = Prng::new(0xF16);
+    let mut tensors = adversarial_tensors();
+    for _ in 0..CASES {
+        tensors.push(random_tensor(&mut rng, -1.0e4, 1.0e4));
+    }
+    for (case, xs) in tensors.iter().enumerate() {
+        let back = decode_to_f32s(&encode_f32s(TransferCodec::Fp16, xs));
+        assert_eq!(back.len(), xs.len(), "case {case}: length");
+        for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
+            if x.abs() > 65504.0 {
+                // Overflow clamps to the largest finite f16, same sign.
+                assert_eq!(y.abs(), 65504.0, "case {case} elem {i}: {x} -> {y}");
+                assert_eq!(
+                    y.is_sign_negative(),
+                    x.is_sign_negative(),
+                    "case {case} elem {i}: sign lost"
+                );
+                continue;
+            }
+            let err = (x as f64 - y as f64).abs();
+            let bound = x.abs() as f64 / 2048.0 + 3.0e-8;
+            assert!(
+                err <= bound,
+                "case {case} elem {i}: {x} -> {y}, err {err} > bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fp16_every_finite_bit_pattern_round_trips_exactly() {
+    // decode(h) is exact in f32, so encode(decode(h)) must give h back for
+    // every finite binary16 — both signs, normals and subnormals alike.
+    for h in 0..0x7c00u16 {
+        for sign in [0u16, 0x8000] {
+            let bits = sign | h;
+            let x = f16_bits_to_f32(bits);
+            assert_eq!(
+                f32_to_f16_bits(x),
+                bits,
+                "bit pattern {bits:#06x} (value {x}) did not round trip"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_error_stays_within_half_a_step() {
+    let mut rng = Prng::new(0x18);
+    let mut tensors = adversarial_tensors();
+    for _ in 0..CASES {
+        // Random span, including asymmetric and very large ranges.
+        let a = ((rng.next_f64() * 2.0 - 1.0) * 3.0e38) as f32;
+        let b = ((rng.next_f64() * 2.0 - 1.0) * 3.0e38) as f32;
+        tensors.push(random_tensor(&mut rng, a.min(b), a.max(b)));
+    }
+    for (case, xs) in tensors.iter().enumerate() {
+        let enc = encode_f32s(TransferCodec::Int8, xs);
+        let EncodedPayload::Int8 { ref q, min, scale } = enc else {
+            panic!("case {case}: wrong payload variant");
+        };
+        assert_eq!(q.len(), xs.len(), "case {case}: length");
+        assert!(min.is_finite() && scale.is_finite(), "case {case}: params");
+        let back = decode_to_f32s(&enc);
+        for (i, (&x, &y)) in xs.iter().zip(&back).enumerate() {
+            assert!(y.is_finite(), "case {case} elem {i}: non-finite {y}");
+            // Half a quantisation step, plus one f32 ulp-ish term for the
+            // final f64 -> f32 rounding of the reconstruction.
+            let err = (x as f64 - y as f64).abs();
+            let bound = scale * 0.5 + x.abs() as f64 * 1e-6;
+            assert!(
+                err <= bound,
+                "case {case} elem {i}: {x} -> {y}, err {err} > bound {bound}"
+            );
+        }
+        // The min endpoint always lands exactly on grid point 0 (q = 0
+        // decodes to `min` verbatim). The max endpoint decodes through
+        // `min + 255 * scale`, whose f64 rounding (~span * 2^-52) only
+        // survives the cast back to f32 when it is below the f32 ulp at
+        // `hi` — guaranteed when |hi| is not vanishingly small vs the span.
+        let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lo_i = xs.iter().position(|&v| v == lo).unwrap();
+        let hi_i = xs.iter().position(|&v| v == hi).unwrap();
+        assert_eq!(back[lo_i], lo, "case {case}: min endpoint");
+        let span = hi as f64 - lo as f64;
+        if hi.abs() as f64 * 1.0e7 >= span {
+            assert_eq!(back[hi_i], hi, "case {case}: max endpoint");
+        }
+    }
+}
+
+#[test]
+fn int8_constant_and_single_element_tensors_are_exact() {
+    let mut rng = Prng::new(0xC0);
+    for case in 0..CASES {
+        let v = rng.next_f32_range(-1.0e6, 1.0e6);
+        let n = 1 + rng.next_below(32);
+        let xs = vec![v; n];
+        let back = decode_to_f32s(&encode_f32s(TransferCodec::Int8, &xs));
+        assert_eq!(back, xs, "case {case}: constant {v} x{n}");
+    }
+}
+
+#[test]
+fn literal_round_trip_preserves_shape_for_every_codec() {
+    let dims = [2usize, 3, 4];
+    let n: usize = dims.iter().product();
+    let mut rng = Prng::new(0x117);
+    let xs: Vec<f32> = (0..n).map(|_| rng.next_f32_range(-100.0, 100.0)).collect();
+    let lit = literal_from_f32(&dims, &xs).unwrap();
+    let raw_bytes = n * 4;
+
+    for codec in [TransferCodec::Fp32, TransferCodec::Fp16, TransferCodec::Int8] {
+        let enc = encode_literal(codec, &lit).unwrap();
+        assert_eq!(enc.dims, dims, "{codec:?}: dims");
+        assert_eq!(enc.raw_bytes, raw_bytes, "{codec:?}: raw bytes");
+        // wire_bytes must agree with the planner's shared byte model.
+        assert_eq!(
+            enc.wire_bytes(),
+            codec.encoded_bytes(raw_bytes),
+            "{codec:?}: wire-byte model mismatch"
+        );
+        let back = decode_literal(&enc).unwrap();
+        let ys = back.to_vec::<f32>().unwrap();
+        assert_eq!(ys.len(), n, "{codec:?}: element count");
+        if codec == TransferCodec::Fp32 {
+            for (i, (a, b)) in xs.iter().zip(&ys).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "fp32 elem {i}");
+            }
+            assert!((enc.compression_ratio() - 1.0).abs() < 1e-12);
+        } else {
+            assert!(enc.compression_ratio() > 1.9, "{codec:?}: ratio");
+        }
+    }
+    // And the int8 header really is the only overhead.
+    let enc8 = encode_literal(TransferCodec::Int8, &lit).unwrap();
+    assert_eq!(enc8.wire_bytes(), n + INT8_HEADER_BYTES);
+}

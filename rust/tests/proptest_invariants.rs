@@ -28,6 +28,7 @@ fn random_profile(rng: &mut Prng) -> ModelProfile {
             edge_time: Duration::from_micros(rng.next_range(10, 50_000)),
             cloud_time: Duration::from_micros(rng.next_range(10, 50_000)),
             output_bytes: rng.next_range(16, 4_000_000) as usize,
+            ..Default::default()
         })
         .collect();
     ModelProfile {

@@ -123,6 +123,82 @@ fn pipelined_reports_match_sequential_across_models_splits_depths() {
     }
 }
 
+/// The codec acceptance shape in miniature: the default fp32 codec is a
+/// true identity (same bytes on the wire, zero encode/decode time, the
+/// exact `latency + bytes*8/bandwidth` charge as ever), int8 shrinks the
+/// wire by ~4x, and overlapped execution under a lossy codec still matches
+/// sequential bit-for-bit (the codec is deterministic and the single
+/// transfer-stage thread keeps the link queue empty).
+#[test]
+fn fp32_codec_is_duration_identical_and_int8_shrinks_wire() {
+    use neukonfig::codec::TransferCodec;
+    use neukonfig::netsim::transfer_time;
+
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = &setup.index.models[0];
+    let env = setup.env(model).unwrap();
+    let n = env.manifest.num_layers();
+    let split = (1..n)
+        .max_by_key(|&k| env.manifest.transfer_bytes(k))
+        .unwrap_or(n / 2);
+    let raw = env.manifest.transfer_bytes(split);
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 11);
+    let frames: Vec<_> = (0..3)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+
+    // Fp32: the identity codec. The link is idle between frames on the
+    // simulated clock, so every charge is exactly the Equation-1 cost.
+    let p32 = env.build_pipeline(split, Placement::NewContainers).unwrap();
+    assert_eq!(p32.codec, TransferCodec::Fp32, "env default must be fp32");
+    p32.transition(PipelineState::Active).unwrap();
+    let rep32 = p32.infer(&frames[0]).unwrap();
+    assert_eq!(rep32.raw_bytes, raw);
+    assert_eq!(rep32.wire_bytes, raw);
+    assert_eq!(rep32.t_encode, Duration::ZERO);
+    assert_eq!(rep32.t_decode, Duration::ZERO);
+    assert_eq!(rep32.compression_ratio(), 1.0);
+    assert_eq!(
+        rep32.t_transfer,
+        transfer_time(raw, env.link.bandwidth_mbps(), env.link.latency()),
+        "fp32 chunked transfer must be duration-identical to the whole-payload charge"
+    );
+
+    // Int8: quarters the wire (plus the quantisation header) and is
+    // strictly cheaper on the same link.
+    let mut p8 = env.build_pipeline(split, Placement::NewContainers).unwrap();
+    p8.codec = TransferCodec::Int8;
+    p8.transition(PipelineState::Active).unwrap();
+    let rep8 = p8.infer(&frames[0]).unwrap();
+    assert_eq!(rep8.raw_bytes, raw);
+    assert_eq!(rep8.wire_bytes, raw / 4 + 16);
+    assert!(rep8.compression_ratio() > 3.0, "ratio {}", rep8.compression_ratio());
+    assert!(rep8.t_transfer < rep32.t_transfer);
+    assert_eq!(
+        rep8.output.to_vec::<f32>().unwrap().len(),
+        rep32.output.to_vec::<f32>().unwrap().len(),
+        "quantisation must not change the output shape"
+    );
+
+    // Overlapped-vs-sequential equivalence holds under a lossy codec too.
+    let sequential: Vec<_> = frames.iter().map(|f| p8.infer(f).unwrap()).collect();
+    let piped = PipelinedRunner::new(2).run(&p8, &frames).unwrap();
+    assert_eq!(piped.len(), sequential.len());
+    for (i, (pr, sr)) in piped.iter().zip(&sequential).enumerate() {
+        assert_eq!(
+            pr.output.to_vec::<f32>().unwrap(),
+            sr.output.to_vec::<f32>().unwrap(),
+            "frame {i}: overlapped int8 output diverged"
+        );
+        assert_eq!(pr.t_transfer, sr.t_transfer, "frame {i}: transfer authority diverged");
+        assert_eq!(pr.wire_bytes, sr.wire_bytes);
+        assert_eq!(pr.codec, TransferCodec::Int8);
+    }
+}
+
 /// The hot_path acceptance shape in miniature: on a transfer-bound
 /// realtime-clock configuration, three stages must not be slower than two
 /// (the transfer of frame N overlaps both edge(N+1) and cloud(N-1)).
