@@ -184,8 +184,8 @@ fn run_one(
         let frame = cam.next_frame();
         let lit = env.frame_literal(&frame)?;
         match router.route(&lit) {
-            Ok(RouteOutcome::Processed(_)) => {}
-            Ok(RouteOutcome::DroppedPaused) => {}
+            Ok(RouteOutcome::Processed(_) | RouteOutcome::Degraded(_)) => {}
+            Ok(RouteOutcome::DroppedPaused | RouteOutcome::DroppedFaulted) => {}
             Err(e) => eprintln!("[{}] route error: {e}", strategy.label()),
         }
 

@@ -62,7 +62,11 @@ fn main() -> Result<()> {
                     fmt_duration(rep.total()),
                 );
             }
-            RouteOutcome::DroppedPaused => println!("frame {} dropped", frame.id),
+            RouteOutcome::Degraded(rep) => {
+                println!("frame {:>2}: served edge-only (degraded), T_e={}", frame.id, fmt_duration(rep.t_edge));
+            }
+            RouteOutcome::DroppedPaused => println!("frame {} dropped (paused)", frame.id),
+            RouteOutcome::DroppedFaulted => println!("frame {} dropped (link fault)", frame.id),
         }
     }
 

@@ -261,6 +261,55 @@ fn main() -> anyhow::Result<()> {
         "int8 planning should move at least one optimum: {split_notes:?}"
     );
 
+    // --- faulted link: retrying transfers vs the clean fast path ----------
+    // Same simulated-clock env and fattest split as the codec rows. The
+    // clean row goes through the retry wrapper's fast path (no plan
+    // installed — cost-identical to an unwrapped transfer); the lossy row
+    // prices 1 % chunk loss with redone attempts + backoff. The window
+    // outlives any bench run on the simulated timeline, and 8 attempts
+    // make exhaustion at 1 % loss effectively impossible, so the row
+    // never drops a frame.
+    cc_env.link.set_bandwidth(net.high_mbps);
+    cc_env.link.clear_fault_plan(); // the clean row must actually be clean
+    let mut fp = cc_env.build_pipeline(cc_split, Placement::NewContainers)?;
+    fp.retry = neukonfig::netsim::RetryPolicy {
+        max_attempts: 8,
+        base_backoff: std::time::Duration::from_millis(5),
+        deadline: None,
+    };
+    fp.transition(PipelineState::Active)?;
+    let xfer_clean = push(bench_measured(
+        &format!("frame transfer, fp32 @ {:.0} Mbps (clean link)", net.high_mbps),
+        &cfg,
+        || {
+            let r = fp.infer(&cc_frame).unwrap();
+            r.t_transfer + r.t_backoff
+        },
+    ));
+    cc_env
+        .link
+        .install_fault_plan(neukonfig::netsim::FaultPlan::parse(
+            "loss:0.01@0..1000000000",
+            0xB3,
+        ));
+    let xfer_lossy = push(bench_measured(
+        &format!(
+            "frame transfer, fp32 @ {:.0} Mbps (1% chunk loss, retries)",
+            net.high_mbps
+        ),
+        &cfg,
+        || {
+            let r = fp.infer(&cc_frame).unwrap();
+            r.t_transfer + r.t_backoff
+        },
+    ));
+    let fault_counters = cc_env.link.fault_counters();
+    cc_env.link.clear_fault_plan();
+    assert!(
+        xfer_lossy.summary.mean >= xfer_clean.summary.mean,
+        "injected loss can only add transfer cost"
+    );
+
     // --- container-sim control plane ------------------------------------
     push(bench_measured("pipeline init, same container (B2 init)", &cfg, || {
         let active = router.active();
@@ -308,6 +357,14 @@ fn main() -> anyhow::Result<()> {
         codec_mean(TransferCodec::Fp32, net.low_mbps)
             / codec_mean(TransferCodec::Int8, net.low_mbps).max(1e-12),
         split_notes.join("; "),
+    ));
+    report.note(format!(
+        "faulted link at {:.0} Mbps: 1% chunk loss costs {:.2}x the clean \
+         mean transfer+backoff ({} chunks lost, {} redone attempts on the row)",
+        net.high_mbps,
+        xfer_lossy.summary.mean / xfer_clean.summary.mean.max(1e-12),
+        fault_counters.chunks_lost,
+        fault_counters.failed_transfers,
     ));
     assert!(switch.summary.p95 < 0.98e-3, "switch p95 must beat the paper's 0.98 ms");
     assert!(

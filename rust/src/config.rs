@@ -137,6 +137,10 @@ pub struct ExperimentConfig {
     /// Edge frame-queue capacity (frames waiting for the edge stage).
     pub queue_capacity: usize,
     pub seed: u64,
+    /// Retry discipline for faultable uplink transfers. The default reads
+    /// the `NEUKONFIG_RETRY_*` env knobs; inert unless a fault plan is
+    /// installed on the link (`NEUKONFIG_FAULT_PROFILE`).
+    pub retry: crate::netsim::RetryPolicy,
 }
 
 impl ExperimentConfig {
@@ -171,6 +175,14 @@ mod tests {
         let z = ContainerCosts::zero();
         assert_eq!(z.pause, Duration::ZERO);
         assert_eq!(z.baseline_reload, Duration::ZERO);
+    }
+
+    #[test]
+    fn retry_policy_is_wired_in() {
+        let c = ExperimentConfig::new();
+        // The env-driven default can be overridden, but must always allow
+        // at least one attempt or every faultable transfer would abort.
+        assert!(c.retry.max_attempts >= 1);
     }
 
     #[test]

@@ -33,4 +33,4 @@ pub use router::{RouteOutcome, Router};
 pub use runner::{PipelinedRunner, StageMode};
 pub use server::{serve, ServeReport, ServerConfig, Strategy};
 pub use state::PipelineState;
-pub use switching::{PlacementCase, ScenarioA, ScenarioB};
+pub use switching::{arm_degraded_fallback, PlacementCase, ScenarioA, ScenarioB};

@@ -56,6 +56,13 @@ impl NetworkMonitor {
         }
     }
 
+    /// Snapshot the watched link's injected-fault counters (chunks lost,
+    /// spiked, aborted attempts) — the monitor is the natural reporting
+    /// point for link health next to bandwidth.
+    pub fn fault_counters(&self) -> crate::netsim::LinkFaultCounters {
+        self.link.fault_counters()
+    }
+
     pub fn next_event(&self) -> Option<(Duration, f64)> {
         self.schedule.lock().unwrap().peek_next()
     }

@@ -11,9 +11,9 @@ use xla::Literal;
 use crate::clock::Clock;
 use crate::codec::{self, TransferCodec};
 use crate::container::{Container, ContainerHost};
-use crate::metrics::CodecStats;
+use crate::metrics::{CodecStats, FaultStats};
 use crate::models::ModelManifest;
-use crate::netsim::Link;
+use crate::netsim::{FaultPlan, Link, RetryPolicy, TransferAborted};
 use crate::runtime::{
     literal_from_f32, BuildOptions, ChainExecutor, Domain, WeightStore,
 };
@@ -89,12 +89,19 @@ pub struct InferenceReport {
     pub raw_bytes: usize,
     pub wire_bytes: usize,
     pub codec: TransferCodec,
+    /// Transfer attempts this frame took (1 on a clean link; more when an
+    /// installed fault plan forced retries; 0 for edge-only frames, which
+    /// never touch the link).
+    pub transfer_attempts: u32,
+    /// Time slept between transfer attempts (zero without faults).
+    pub t_backoff: Duration,
     pub output: Literal,
 }
 
 impl InferenceReport {
     pub fn total(&self) -> Duration {
-        self.t_edge + self.t_encode + self.t_transfer + self.t_decode + self.t_cloud
+        self.t_edge + self.t_encode + self.t_transfer + self.t_backoff + self.t_decode
+            + self.t_cloud
     }
 
     /// Raw-to-wire size ratio for this frame (1.0 for empty payloads).
@@ -111,11 +118,17 @@ impl InferenceReport {
 #[derive(Debug, Clone, Copy)]
 pub struct TransferReport {
     pub codec: TransferCodec,
+    /// Link time across every attempt (failed attempts' burnt time
+    /// included — the link really was occupied).
     pub t_transfer: Duration,
     pub t_encode: Duration,
     pub t_decode: Duration,
     pub raw_bytes: usize,
     pub wire_bytes: usize,
+    /// Attempts made (1 on a clean link).
+    pub attempts: u32,
+    /// Backoff slept between attempts.
+    pub t_backoff: Duration,
 }
 
 /// A live edge-cloud pipeline executing DNN partitions at one split point.
@@ -136,6 +149,10 @@ pub struct Pipeline {
     pub chunk_bytes: usize,
     /// Cumulative codec counters over this pipeline's frames.
     pub codec_stats: CodecStats,
+    /// Retry discipline for faultable transfers (inert on clean links).
+    pub retry: RetryPolicy,
+    /// Retry/backoff/drop counters over this pipeline's frames.
+    pub fault_stats: FaultStats,
     state: Mutex<PipelineState>,
 }
 
@@ -193,8 +210,89 @@ impl Pipeline {
             raw_bytes: xfer.raw_bytes,
             wire_bytes: xfer.wire_bytes,
             codec: xfer.codec,
+            transfer_attempts: xfer.attempts,
+            t_backoff: xfer.t_backoff,
             output,
         })
+    }
+
+    /// Degraded-mode inference (§III-B "degraded until switch"): run only
+    /// the edge chain, never touching the link or the cloud chain. Valid
+    /// only for a full-model split (empty cloud chain) — the fallback
+    /// pipeline the router arms via `Router::arm_degraded`. No state gate:
+    /// the fallback serves from `Standby` while the real pipeline is
+    /// nominally `Active`; the router is the authority on when degraded
+    /// frames are allowed.
+    pub fn infer_edge_only(&self, frame: &Literal) -> Result<InferenceReport> {
+        anyhow::ensure!(
+            self.cloud_chain.is_empty(),
+            "pipeline {}: edge-only inference needs the full model on the edge \
+             (split {}, cloud chain non-empty)",
+            self.id,
+            self.split,
+        );
+        let (output, edge_t) = self.edge_chain.run(frame, &self.clock)?;
+        Ok(InferenceReport {
+            t_edge: edge_t.total,
+            t_transfer: Duration::ZERO,
+            t_cloud: Duration::ZERO,
+            edge_per_layer: edge_t.per_layer,
+            cloud_per_layer: Vec::new(),
+            t_encode: Duration::ZERO,
+            t_decode: Duration::ZERO,
+            raw_bytes: 0,
+            wire_bytes: 0,
+            codec: self.codec,
+            transfer_attempts: 0,
+            t_backoff: Duration::ZERO,
+            output,
+        })
+    }
+
+    /// Charge the link for `wire_bytes` under this pipeline's
+    /// [`RetryPolicy`]: retry faulted attempts with exponential backoff
+    /// until success, attempt exhaustion, or the deadline passes. Returns
+    /// `(link_time_across_attempts, backoff_slept, attempts)`. On a link
+    /// with no fault plan this is a single infallible transfer with the
+    /// historical cost arithmetic — no retry bookkeeping at all.
+    fn transfer_with_retry(&self, wire_bytes: usize) -> Result<(Duration, Duration, u32)> {
+        if !self.link.has_fault_plan() {
+            let t = self.link.transfer_chunked(wire_bytes, self.chunk_bytes);
+            return Ok((t, Duration::ZERO, 1));
+        }
+        let policy = self.retry;
+        let t0 = self.clock.now();
+        let mut link_time = Duration::ZERO;
+        let mut backoff_total = Duration::ZERO;
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            if attempt > 1 {
+                let pause = policy.backoff_before(attempt);
+                self.clock.sleep(pause);
+                backoff_total += pause;
+                self.fault_stats.record_retry(pause);
+            }
+            match self.link.try_transfer_chunked(wire_bytes, self.chunk_bytes) {
+                Ok(t) => return Ok((link_time + t, backoff_total, attempt)),
+                Err(f) => {
+                    link_time += f.elapsed;
+                    let deadline_exceeded = policy
+                        .deadline
+                        .is_some_and(|dl| self.clock.now() - t0 >= dl);
+                    if attempt >= policy.max_attempts || deadline_exceeded {
+                        self.fault_stats.record_dropped_frame();
+                        return Err(anyhow::Error::new(TransferAborted {
+                            attempts: attempt,
+                            last_fault: f.kind,
+                            deadline_exceeded,
+                            elapsed: link_time,
+                        })
+                        .context(format!("transfer of {wire_bytes} bytes abandoned")));
+                    }
+                }
+            }
+        }
     }
 
     /// Encode the split tensor with this pipeline's codec, charge the link
@@ -206,7 +304,7 @@ impl Pipeline {
     pub fn ship(&self, intermediate: Literal) -> Result<(Literal, TransferReport)> {
         let raw_bytes = literal_bytes(&intermediate);
         if self.codec == TransferCodec::Fp32 {
-            let t_transfer = self.link.transfer_chunked(raw_bytes, self.chunk_bytes);
+            let (t_transfer, t_backoff, attempts) = self.transfer_with_retry(raw_bytes)?;
             let rep = TransferReport {
                 codec: self.codec,
                 t_transfer,
@@ -214,6 +312,8 @@ impl Pipeline {
                 t_decode: Duration::ZERO,
                 raw_bytes,
                 wire_bytes: raw_bytes,
+                attempts,
+                t_backoff,
             };
             self.codec_stats
                 .record(rep.raw_bytes, rep.wire_bytes, rep.t_encode, rep.t_decode);
@@ -223,7 +323,7 @@ impl Pipeline {
         let enc = codec::encode_literal(self.codec, &intermediate)?;
         let t_encode = t0.elapsed();
         let wire_bytes = enc.wire_bytes();
-        let t_transfer = self.link.transfer_chunked(wire_bytes, self.chunk_bytes);
+        let (t_transfer, t_backoff, attempts) = self.transfer_with_retry(wire_bytes)?;
         let t1 = Instant::now();
         let decoded = codec::decode_literal(&enc)?;
         let t_decode = t1.elapsed();
@@ -234,6 +334,8 @@ impl Pipeline {
             t_decode,
             raw_bytes,
             wire_bytes,
+            attempts,
+            t_backoff,
         };
         self.codec_stats.record(raw_bytes, wire_bytes, t_encode, t_decode);
         Ok((decoded, rep))
@@ -266,6 +368,8 @@ impl Pipeline {
             codec: TransferCodec::from_env(),
             chunk_bytes: crate::netsim::default_chunk_bytes(),
             codec_stats: CodecStats::default(),
+            retry: RetryPolicy::default(),
+            fault_stats: FaultStats::default(),
             state: Mutex::new(PipelineState::Initialising),
         }
     }
@@ -318,6 +422,12 @@ impl EdgeCloudEnv {
             cfg.network.high_mbps,
             cfg.network.latency,
         ));
+        // Opt-in fault injection: NEUKONFIG_FAULT_PROFILE attaches a
+        // seeded fault schedule to the uplink (no profile, no plan — and
+        // the link stays bit-identical to the clean model).
+        if let Some(plan) = FaultPlan::from_env() {
+            link.install_fault_plan(plan);
+        }
         let edge_host = ContainerHost::new(
             "edge",
             cfg.memory.edge_total_mb,
@@ -495,6 +605,8 @@ impl EdgeCloudEnv {
             codec: opts.transfer_codec,
             chunk_bytes: crate::netsim::default_chunk_bytes(),
             codec_stats: CodecStats::default(),
+            retry: self.cfg.retry,
+            fault_stats: FaultStats::default(),
             state: Mutex::new(PipelineState::Initialising),
         })
     }

@@ -6,16 +6,29 @@
 //! every frame (the paper: "no frames sent from the device to the edge
 //! will be processed"); during a Dynamic Switching window frames keep
 //! flowing to the old pipeline at degraded quality.
+//!
+//! Fault tolerance (§III-B's "degraded until switch", made literal):
+//! when a frame's uplink transfer exhausts its retries
+//! ([`TransferAborted`]), the frame is dropped and — if a full-model
+//! fallback pipeline is armed via [`Router::arm_degraded`] — the router
+//! enters a *degraded window*, answering subsequent frames edge-only
+//! until a successful [`Router::switch`] ends it. Switches themselves
+//! can roll back: [`Router::switch_probed`] probes the new pipeline
+//! *before* the pointer swap, so a failed bring-up or probe leaves the
+//! router on the old pipeline and only a [`FaultStats`] counter (and the
+//! caller's `DowntimeRecord`) remembers the attempt.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::Result;
 use xla::Literal;
 
 use crate::clock::Clock;
-use crate::metrics::{FrameStats, LatencyHistogram};
+use crate::metrics::{FaultStats, FrameStats, LatencyHistogram};
+use crate::netsim::TransferAborted;
+use crate::util::sync::{lock_clean, read_clean, write_clean};
 
 use super::pipeline::{InferenceReport, Pipeline};
 use super::runner::PipelinedRunner;
@@ -26,6 +39,18 @@ pub enum RouteOutcome {
     Processed(InferenceReport),
     /// Dropped because the router is paused (baseline downtime).
     DroppedPaused,
+    /// Dropped because the transfer exhausted its retries/deadline.
+    DroppedFaulted,
+    /// Served edge-only by the degraded fallback pipeline.
+    Degraded(InferenceReport),
+}
+
+/// Degraded-mode bookkeeping: the armed fallback and, while a window is
+/// open, when it opened.
+#[derive(Default)]
+struct DegradedState {
+    fallback: Option<Arc<Pipeline>>,
+    since: Option<Duration>,
 }
 
 pub struct Router {
@@ -33,9 +58,13 @@ pub struct Router {
     paused: AtomicBool,
     /// Set while a repartition window is open (frame-drop attribution).
     in_downtime: AtomicBool,
+    degraded: Mutex<DegradedState>,
     pub clock: Clock,
     pub stats: FrameStats,
     pub latency: LatencyHistogram,
+    /// Degraded-window and aborted-switch counters (router view; per-frame
+    /// retry counters live on each pipeline's `fault_stats`).
+    pub fault_stats: FaultStats,
 }
 
 impl Router {
@@ -46,14 +75,16 @@ impl Router {
             active: RwLock::new(initial),
             paused: AtomicBool::new(false),
             in_downtime: AtomicBool::new(false),
+            degraded: Mutex::new(DegradedState::default()),
             clock,
             stats: FrameStats::new(),
             latency: LatencyHistogram::new(true),
+            fault_stats: FaultStats::new(),
         })
     }
 
     pub fn active(&self) -> Arc<Pipeline> {
-        self.active.read().unwrap().clone()
+        read_clean(&self.active).clone()
     }
 
     pub fn is_paused(&self) -> bool {
@@ -68,25 +99,95 @@ impl Router {
         self.in_downtime.load(Ordering::Acquire)
     }
 
-    /// Route one frame to the active pipeline.
+    /// Arm the degraded fallback: a full-model-on-the-edge pipeline
+    /// (empty cloud chain) held in `Standby`, serving edge-only frames
+    /// whenever retry exhaustion opens a degraded window.
+    pub fn arm_degraded(&self, fallback: Arc<Pipeline>) -> Result<()> {
+        anyhow::ensure!(
+            fallback.cloud_chain.is_empty(),
+            "degraded fallback must hold the full model on the edge \
+             (pipeline {} has a non-empty cloud chain)",
+            fallback.id,
+        );
+        if fallback.state() == PipelineState::Initialising {
+            fallback.transition(PipelineState::Standby)?;
+        }
+        lock_clean(&self.degraded).fallback = Some(fallback);
+        Ok(())
+    }
+
+    /// The armed fallback, if any.
+    pub fn degraded_pipeline(&self) -> Option<Arc<Pipeline>> {
+        lock_clean(&self.degraded).fallback.clone()
+    }
+
+    /// Whether a degraded window is currently open.
+    pub fn in_degraded(&self) -> bool {
+        lock_clean(&self.degraded).since.is_some()
+    }
+
+    /// Open a degraded window (idempotent while one is open).
+    fn enter_degraded(&self) {
+        let mut d = lock_clean(&self.degraded);
+        if d.since.is_none() {
+            d.since = Some(self.clock.now());
+        }
+    }
+
+    /// Close the degraded window, crediting its duration to the stats.
+    fn exit_degraded(&self) {
+        let since = lock_clean(&self.degraded).since.take();
+        if let Some(t0) = since {
+            self.fault_stats.record_degraded_window(self.clock.now() - t0);
+        }
+    }
+
+    /// Route one frame to the active pipeline — or, inside a degraded
+    /// window, edge-only to the fallback.
     pub fn route(&self, frame: &Literal) -> Result<RouteOutcome> {
         self.stats.produced();
         if self.is_paused() {
             self.stats.dropped(self.in_downtime());
             return Ok(RouteOutcome::DroppedPaused);
         }
+        if self.in_degraded() {
+            if let Some(fb) = self.degraded_pipeline() {
+                let report = fb.infer_edge_only(frame)?;
+                self.fault_stats.record_degraded_frame();
+                self.latency.record(report.total());
+                self.stats.processed();
+                return Ok(RouteOutcome::Degraded(report));
+            }
+        }
         let pipeline = self.active();
-        let report = pipeline.infer(frame)?;
-        self.latency.record(report.total());
-        self.stats.processed();
-        Ok(RouteOutcome::Processed(report))
+        match pipeline.infer(frame) {
+            Ok(report) => {
+                self.latency.record(report.total());
+                self.stats.processed();
+                Ok(RouteOutcome::Processed(report))
+            }
+            // Retry exhaustion: this frame is lost either way; with a
+            // fallback armed the *next* frames serve edge-only.
+            Err(e) if e.downcast_ref::<TransferAborted>().is_some() => {
+                self.stats.dropped(self.in_downtime());
+                if self.degraded_pipeline().is_some() {
+                    self.enter_degraded();
+                }
+                Ok(RouteOutcome::DroppedFaulted)
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Route a burst of frames with edge/cloud overlap (the
     /// [`PipelinedRunner`] path). The active pipeline is pinned for the
     /// whole burst — a concurrent switch takes effect at the next call —
     /// and per-frame stats/latency are recorded exactly as [`Self::route`]
-    /// does. While paused, every frame in the burst is dropped.
+    /// does. While paused, every frame in the burst is dropped. Frames
+    /// the runner dropped on retry exhaustion surface as
+    /// [`RouteOutcome::DroppedFaulted`] (appended after the processed
+    /// reports, which stay in frame order) and open a degraded window
+    /// when a fallback is armed.
     pub fn route_batch(
         &self,
         frames: &[Literal],
@@ -106,11 +207,19 @@ impl Router {
         }
         let pipeline = self.active();
         let reports = runner.run(&pipeline, frames)?;
-        let mut out = Vec::with_capacity(reports.len());
+        let dropped = frames.len() - reports.len();
+        let mut out = Vec::with_capacity(frames.len());
         for report in reports {
             self.latency.record(report.total());
             self.stats.processed();
             out.push(RouteOutcome::Processed(report));
+        }
+        for _ in 0..dropped {
+            self.stats.dropped(self.in_downtime());
+            out.push(RouteOutcome::DroppedFaulted);
+        }
+        if dropped > 0 && self.degraded_pipeline().is_some() {
+            self.enter_degraded();
         }
         Ok(out)
     }
@@ -123,8 +232,9 @@ impl Router {
 
     /// Atomically redirect traffic to `new` (Dynamic Switching's
     /// `t_switch`). The old pipeline is moved to Draining and returned so
-    /// the strategy can retire or recycle it. Returns the measured switch
-    /// time on the experiment clock.
+    /// the strategy can retire or recycle it. A successful switch closes
+    /// any open degraded window — the repartition is the cure. Returns
+    /// the measured switch time on the experiment clock.
     pub fn switch(&self, new: Arc<Pipeline>) -> Result<(Arc<Pipeline>, Duration)> {
         let t0 = self.clock.now();
         match new.state() {
@@ -135,11 +245,36 @@ impl Router {
             s => anyhow::bail!("cannot switch to a pipeline in state {s}"),
         }
         let old = {
-            let mut guard = self.active.write().unwrap();
+            let mut guard = write_clean(&self.active);
             std::mem::replace(&mut *guard, new)
         };
         old.transition(PipelineState::Draining)?;
+        self.exit_degraded();
         Ok((old, self.clock.now() - t0))
+    }
+
+    /// [`Self::switch`] with a probe-first guard (the rollback half of
+    /// fault-tolerant switching): run one probe inference through `new`
+    /// *before* the pointer swap. If the probe fails — a faulted link
+    /// exhausting retries, a broken chain — the router is untouched, the
+    /// old pipeline keeps serving, and the aborted switch is counted.
+    /// The probe frame's cost lands on the experiment clock (it really
+    /// ran), but never on the router's per-frame stats.
+    pub fn switch_probed(
+        &self,
+        new: Arc<Pipeline>,
+        probe: &Literal,
+    ) -> Result<(Arc<Pipeline>, Duration)> {
+        if let Err(e) = new.infer_unchecked(probe) {
+            self.fault_stats.record_aborted_switch();
+            return Err(e.context(format!(
+                "probe inference failed on pipeline {}; switch rolled back, \
+                 router stays on pipeline {}",
+                new.id,
+                self.active().id,
+            )));
+        }
+        self.switch(new)
     }
 
     /// Baseline pause: stop processing entirely.
@@ -156,7 +291,7 @@ impl Router {
             Some(p) => {
                 p.transition(PipelineState::Active)?;
                 let old = {
-                    let mut guard = self.active.write().unwrap();
+                    let mut guard = write_clean(&self.active);
                     std::mem::replace(&mut *guard, p)
                 };
                 old.transition(PipelineState::Terminated)?;

@@ -34,7 +34,11 @@
 //! the originating stage and frame index) and every stage drains cleanly —
 //! dropping a receiver fails the upstream `send`, which stops that stage,
 //! so no thread ever blocks on a dead peer and no out-of-order or partial
-//! report is returned.
+//! report is returned. One exception: a transfer abandoned by the retry
+//! policy ([`TransferAborted`] — an injected-fault link exhausting its
+//! attempts or deadline) drops *that frame only* (the Fig. 14/15
+//! frame-drop regime; `Pipeline::fault_stats` counts it) and the burst
+//! continues — a hostile link must not wedge the stage.
 //!
 //! [`Link::transfer`]: crate::netsim::Link::transfer
 //! [`Clock`]: crate::clock::Clock
@@ -44,6 +48,7 @@ use std::sync::mpsc::sync_channel;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::Literal;
 
+use crate::netsim::TransferAborted;
 use crate::runtime::ChainTiming;
 
 use super::pipeline::{InferenceReport, Pipeline, TransferReport};
@@ -129,6 +134,7 @@ impl PipelinedRunner {
     ) -> Result<Vec<InferenceReport>> {
         let (tx, rx) = sync_channel::<Staged<(Literal, ChainTiming)>>(self.depth);
         let mut reports = Vec::with_capacity(frames.len());
+        let mut dropped = 0usize;
 
         let edge_progress = std::thread::scope(|s| -> Result<usize> {
             let producer = s.spawn(move || {
@@ -156,9 +162,17 @@ impl PipelinedRunner {
                     Err(_) => break,
                 };
                 let (intermediate, edge_t) = staged?;
-                let (cloud_input, xfer) = pipeline
-                    .ship(intermediate)
-                    .with_context(|| format!("transfer stage failed at frame {i}"))?;
+                let (cloud_input, xfer) = match pipeline.ship(intermediate) {
+                    Ok(shipped) => shipped,
+                    // Retry exhaustion drops this frame, not the burst.
+                    Err(e) if is_transfer_abort(&e) => {
+                        dropped += 1;
+                        continue;
+                    }
+                    Err(e) => {
+                        return Err(e.context(format!("transfer stage failed at frame {i}")))
+                    }
+                };
                 let (output, cloud_t) = pipeline
                     .cloud_chain
                     .run(&cloud_input, &pipeline.clock)
@@ -169,7 +183,7 @@ impl PipelinedRunner {
             producer.join().map_err(|_| anyhow!("edge stage panicked"))
         })?;
 
-        check_complete(reports.len(), frames.len(), &[("edge", edge_progress)])?;
+        check_complete(reports.len(), dropped, frames.len(), &[("edge", edge_progress)])?;
         Ok(reports)
     }
 
@@ -179,9 +193,12 @@ impl PipelinedRunner {
         frames: &[Literal],
     ) -> Result<Vec<InferenceReport>> {
         let (edge_tx, edge_rx) = sync_channel::<Staged<(Literal, ChainTiming)>>(self.depth);
+        // `None` in the hand-off marks a frame the transfer stage dropped
+        // (retry exhaustion) — the cloud stage skips it and keeps going.
         let (link_tx, link_rx) =
-            sync_channel::<Staged<(Literal, ChainTiming, TransferReport)>>(self.depth);
+            sync_channel::<Staged<Option<(Literal, ChainTiming, TransferReport)>>>(self.depth);
         let mut reports = Vec::with_capacity(frames.len());
+        let mut dropped = 0usize;
 
         let (edge_progress, transfer_progress) =
             std::thread::scope(|s| -> Result<(usize, usize)> {
@@ -206,14 +223,20 @@ impl PipelinedRunner {
                         // the intermediate over the FIFO link otherwise.
                         // The link keeps its own timing authority (queueing
                         // + serialisation), exactly as in the 2-stage path.
-                        let handoff = staged.and_then(|(intermediate, edge_t)| {
-                            pipeline
-                                .ship(intermediate)
-                                .map(|(cloud_input, xfer)| (cloud_input, edge_t, xfer))
-                                .with_context(|| {
-                                    format!("transfer stage failed at frame {i}")
-                                })
-                        });
+                        let handoff = match staged {
+                            Err(e) => Err(e),
+                            Ok((intermediate, edge_t)) => match pipeline.ship(intermediate) {
+                                Ok((cloud_input, xfer)) => {
+                                    Ok(Some((cloud_input, edge_t, xfer)))
+                                }
+                                // Retry exhaustion: drop the frame, keep
+                                // the stage alive for the next one.
+                                Err(e) if is_transfer_abort(&e) => Ok(None),
+                                Err(e) => Err(e.context(format!(
+                                    "transfer stage failed at frame {i}"
+                                ))),
+                            },
+                        };
                         let failed = handoff.is_err();
                         if link_tx.send((i, handoff)).is_err() || failed {
                             return shipped;
@@ -228,7 +251,10 @@ impl PipelinedRunner {
                         Ok(handoff) => handoff,
                         Err(_) => break,
                     };
-                    let (cloud_input, edge_t, xfer) = staged?;
+                    let Some((cloud_input, edge_t, xfer)) = staged? else {
+                        dropped += 1;
+                        continue;
+                    };
                     let (output, cloud_t) = pipeline
                         .cloud_chain
                         .run(&cloud_input, &pipeline.clock)
@@ -246,11 +272,19 @@ impl PipelinedRunner {
 
         check_complete(
             reports.len(),
+            dropped,
             frames.len(),
             &[("edge", edge_progress), ("transfer", transfer_progress)],
         )?;
         Ok(reports)
     }
+}
+
+/// True when the error chain bottoms out in a [`TransferAborted`] — the
+/// one failure a runner absorbs as a per-frame drop instead of a stage
+/// abort (anyhow's downcast searches through the added context).
+fn is_transfer_abort(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<TransferAborted>().is_some()
 }
 
 fn report(
@@ -270,6 +304,8 @@ fn report(
         raw_bytes: xfer.raw_bytes,
         wire_bytes: xfer.wire_bytes,
         codec: xfer.codec,
+        transfer_attempts: xfer.attempts,
+        t_backoff: xfer.t_backoff,
         output,
     }
 }
@@ -277,9 +313,10 @@ fn report(
 /// Attribute a short run to the stage that stopped first: a hand-off
 /// channel closing without a consumable error used to surface as a bare
 /// "produced N of M reports" — now the message names the originating stage
-/// and the frame index it stopped at.
-fn check_complete(got: usize, want: usize, stages: &[(&str, usize)]) -> Result<()> {
-    if got == want {
+/// and the frame index it stopped at. Frames the transfer stage dropped
+/// on retry exhaustion are accounted for, not short.
+fn check_complete(got: usize, dropped: usize, want: usize, stages: &[(&str, usize)]) -> Result<()> {
+    if got + dropped == want {
         return Ok(());
     }
     let culprit = stages
@@ -311,10 +348,18 @@ mod tests {
 
     #[test]
     fn short_run_names_slowest_stage_and_frame() {
-        let err = check_complete(3, 8, &[("edge", 6), ("transfer", 3)]).unwrap_err();
+        let err = check_complete(3, 0, 8, &[("edge", 6), ("transfer", 3)]).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("3 of 8"), "got: {msg}");
         assert!(msg.contains("transfer stage stopped at frame 3"), "got: {msg}");
-        assert!(check_complete(8, 8, &[("edge", 8)]).is_ok());
+        assert!(check_complete(8, 0, 8, &[("edge", 8)]).is_ok());
+    }
+
+    #[test]
+    fn dropped_frames_are_not_a_short_run() {
+        // 6 reports + 2 retry-exhaustion drops over 8 frames is complete.
+        assert!(check_complete(6, 2, 8, &[("edge", 8), ("transfer", 8)]).is_ok());
+        // ... but a drop cannot paper over a genuinely missing report.
+        assert!(check_complete(5, 2, 8, &[("edge", 8), ("transfer", 6)]).is_err());
     }
 }

@@ -52,6 +52,9 @@ impl PipelineState {
                 | (Draining, Terminated)
                 | (Standby, Terminated)
                 | (Paused, Terminated)
+                // Stillborn: built but never served — a probe-guarded
+                // switch rolled back before activation.
+                | (Initialising, Terminated)
         )
     }
 
@@ -78,6 +81,9 @@ mod tests {
         assert!(Draining.can_transition(Terminated));
         // Scenario A swap: old active pipeline becomes the new standby.
         assert!(Active.can_transition(Standby));
+        // Rollback: a stillborn pipeline (probe failed before activation)
+        // is retired without ever serving.
+        assert!(Initialising.can_transition(Terminated));
     }
 
     #[test]

@@ -105,6 +105,48 @@ impl ScenarioA {
         Ok(rec)
     }
 
+    /// [`Self::switch`] with a probe-first rollback guard: the standby is
+    /// probed *before* the router swap. If the probe fails (a faulted
+    /// link exhausting retries, a broken chain), the router stays on the
+    /// old pipeline, the standby is put back untouched, and the returned
+    /// record is marked `aborted` with an `aborted-switch` phase — the
+    /// window cost time but changed nothing.
+    pub fn switch_probed(&self, probe: &Literal) -> Result<DowntimeRecord> {
+        let clock = &self.env.clock;
+        let sim0 = clock.simulated_component();
+        let t0 = clock.now();
+        let mut rec = DowntimeRecord::default();
+
+        self.router.set_downtime(true);
+        let standby = self
+            .standby
+            .lock()
+            .unwrap()
+            .take()
+            .context("no standby pipeline available")?;
+        match self.router.switch_probed(standby.clone(), probe) {
+            Ok((old, t_switch)) => {
+                rec.push_phase("switch", t_switch);
+                self.router.set_downtime(false);
+                rec.total = clock.now() - t0;
+                rec.simulated = clock.simulated_component() - sim0;
+                old.transition(PipelineState::Standby)?;
+                *self.standby.lock().unwrap() = Some(old);
+            }
+            Err(_) => {
+                // Rollback: the router never swapped (switch_probed counted
+                // the abort); the standby is still Standby — restore it.
+                self.router.set_downtime(false);
+                rec.aborted = true;
+                rec.push_phase("aborted-switch", clock.now() - t0);
+                rec.total = clock.now() - t0;
+                rec.simulated = clock.simulated_component() - sim0;
+                *self.standby.lock().unwrap() = Some(standby);
+            }
+        }
+        Ok(rec)
+    }
+
     /// Rebuild the standby at a different split (background work after a
     /// plan change; NOT part of any downtime window). Returns the rebuild
     /// duration.
@@ -202,6 +244,89 @@ impl ScenarioB {
         Ok(rec)
     }
 
+    /// [`Self::repartition`] with rollback on *both* failure points: a
+    /// failed bring-up (the new pipeline never came up) and a failed
+    /// pre-swap probe both leave the router serving the old pipeline and
+    /// return an `aborted` record instead of an error — the repartition
+    /// simply did not happen, which for a trigger loop is a condition to
+    /// note, not a crash. Contrast [`Self::repartition`], which
+    /// propagates bring-up errors (the memory-exhaustion experiments
+    /// depend on seeing them).
+    pub fn repartition_guarded(
+        &self,
+        new_split: usize,
+        probe: &Literal,
+    ) -> Result<DowntimeRecord> {
+        let clock = &self.env.clock;
+        let sim0 = clock.simulated_component();
+        let t0 = clock.now();
+        let mut rec = DowntimeRecord::default();
+
+        self.router.set_downtime(true);
+        let old_active = self.router.active();
+        let placement = match self.case {
+            PlacementCase::NewContainer => Placement::NewContainers,
+            PlacementCase::SameContainer => Placement::Existing {
+                edge: old_active.edge_container.clone(),
+                cloud: old_active.cloud_container.clone(),
+            },
+        };
+        let new_pipe = match self.env.build_pipeline(new_split, placement) {
+            Ok(p) => Arc::new(p),
+            Err(_) => {
+                // Stillborn bring-up: nothing to retire, nothing swapped.
+                self.router.set_downtime(false);
+                self.router.fault_stats.record_aborted_switch();
+                rec.aborted = true;
+                rec.push_phase("aborted-bringup", clock.now() - t0);
+                rec.total = clock.now() - t0;
+                rec.simulated = clock.simulated_component() - sim0;
+                return Ok(rec);
+            }
+        };
+        let t_init = clock.now() - t0;
+        rec.push_phase(
+            match self.case {
+                PlacementCase::NewContainer => "initialisation",
+                PlacementCase::SameContainer => "exec",
+            },
+            t_init,
+        );
+
+        let t_probe = clock.now();
+        match self.router.switch_probed(new_pipe.clone(), probe) {
+            Ok((old, t_switch)) => {
+                rec.push_phase("switch", t_switch);
+                self.router.set_downtime(false);
+                rec.total = clock.now() - t0;
+                rec.simulated = clock.simulated_component() - sim0;
+                old.transition(PipelineState::Terminated)?;
+                if self.case == PlacementCase::NewContainer
+                    && !Arc::ptr_eq(&old, &self.router.active())
+                {
+                    self.env.edge_host.stop(&old.edge_container);
+                    self.env.cloud_host.stop(&old.cloud_container);
+                }
+            }
+            Err(_) => {
+                // Probe failed: the router never swapped (switch_probed
+                // counted the abort). Retire the stillborn pipeline; Case 1
+                // releases its containers, ending the transient 2x memory.
+                self.router.set_downtime(false);
+                rec.aborted = true;
+                rec.push_phase("aborted-switch", clock.now() - t_probe);
+                rec.total = clock.now() - t0;
+                rec.simulated = clock.simulated_component() - sim0;
+                new_pipe.transition(PipelineState::Terminated)?;
+                if self.case == PlacementCase::NewContainer {
+                    self.env.edge_host.stop(&new_pipe.edge_container);
+                    self.env.cloud_host.stop(&new_pipe.cloud_container);
+                }
+            }
+        }
+        Ok(rec)
+    }
+
     /// [`Self::repartition`], then run one probe frame on the new active
     /// pipeline and append its per-layer timings to the record as
     /// `edge/layerN` / `cloud/layerN` phases. The probe runs *after* the
@@ -223,6 +348,40 @@ impl ScenarioB {
         rec.push_layer_phases("edge", 0, &report.edge_per_layer);
         rec.push_layer_phases("cloud", active.split, &report.cloud_per_layer);
         Ok(rec)
+    }
+}
+
+/// Build and arm the degraded fallback: the full model on the edge
+/// (split = N, empty cloud chain) inside the active pipeline's existing
+/// containers — no extra container start and (per Table I's Case-2
+/// accounting) no additional memory. Once armed, retry exhaustion on the
+/// uplink flips the router into edge-only serving (§III-B "degraded until
+/// switch") until the next successful switch closes the window.
+pub fn arm_degraded_fallback(env: &EdgeCloudEnv, router: &Router) -> Result<Arc<Pipeline>> {
+    let active = router.active();
+    let full = env.manifest.num_layers();
+    let fallback = Arc::new(env.build_pipeline(
+        full,
+        Placement::Existing {
+            edge: active.edge_container.clone(),
+            cloud: active.cloud_container.clone(),
+        },
+    )?);
+    router.arm_degraded(fallback.clone())?;
+    Ok(fallback)
+}
+
+impl ScenarioA {
+    /// [`arm_degraded_fallback`] for this scenario's env and router.
+    pub fn arm_degraded_fallback(&self) -> Result<Arc<Pipeline>> {
+        arm_degraded_fallback(&self.env, &self.router)
+    }
+}
+
+impl ScenarioB {
+    /// [`arm_degraded_fallback`] for this scenario's env and router.
+    pub fn arm_degraded_fallback(&self) -> Result<Arc<Pipeline>> {
+        arm_degraded_fallback(&self.env, &self.router)
     }
 }
 

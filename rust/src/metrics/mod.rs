@@ -16,6 +16,10 @@ pub struct DowntimeRecord {
     pub simulated: Duration,
     /// Named phases, in order (e.g. "pause", "rebuild-edge", "switch").
     pub phases: Vec<(String, Duration)>,
+    /// True when the switch this record describes was rolled back — the
+    /// router stayed on (or reverted to) the old pipeline and the time
+    /// above bought nothing but the failed bring-up/probe.
+    pub aborted: bool,
 }
 
 impl DowntimeRecord {
@@ -170,6 +174,91 @@ impl CodecStatsInner {
     }
 }
 
+/// Fault-tolerance accounting: what the retry/degradation machinery
+/// actually did. Pipelines count retries, backoff and dropped frames
+/// (the Fig. 14/15 frame-drop regime); the router adds degraded-window
+/// durations and aborted switches. Same mutex-over-inner shape as
+/// [`CodecStats`]; stage threads record into it, so the lock recovers
+/// from poison.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    inner: Mutex<FaultStatsInner>,
+}
+
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultStatsInner {
+    /// Transfer attempts beyond each frame's first.
+    pub retries: u64,
+    /// Time spent sleeping between attempts (not link time).
+    pub backoff_time: Duration,
+    /// Frames abandoned after retries/deadline exhausted.
+    pub dropped_frames: u64,
+    /// Degraded (edge-only) windows entered.
+    pub degraded_windows: u64,
+    /// Total time spent serving degraded.
+    pub degraded_time: Duration,
+    /// Frames answered edge-only while degraded.
+    pub degraded_frames: u64,
+    /// Switches rolled back after a failed bring-up or probe.
+    pub aborted_switches: u64,
+}
+
+impl FaultStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_retry(&self, backoff: Duration) {
+        let mut s = crate::util::sync::lock_clean(&self.inner);
+        s.retries += 1;
+        s.backoff_time += backoff;
+    }
+
+    pub fn record_dropped_frame(&self) {
+        crate::util::sync::lock_clean(&self.inner).dropped_frames += 1;
+    }
+
+    pub fn record_degraded_window(&self, lasted: Duration) {
+        let mut s = crate::util::sync::lock_clean(&self.inner);
+        s.degraded_windows += 1;
+        s.degraded_time += lasted;
+    }
+
+    pub fn record_degraded_frame(&self) {
+        crate::util::sync::lock_clean(&self.inner).degraded_frames += 1;
+    }
+
+    pub fn record_aborted_switch(&self) {
+        crate::util::sync::lock_clean(&self.inner).aborted_switches += 1;
+    }
+
+    pub fn snapshot(&self) -> FaultStatsInner {
+        crate::util::sync::lock_clean(&self.inner).clone()
+    }
+}
+
+impl FaultStatsInner {
+    /// Whether the fault machinery fired at all — a clean run keeps this
+    /// false, which the no-fault identity tests pin.
+    pub fn any(&self) -> bool {
+        *self != FaultStatsInner::default()
+    }
+
+    /// Fold another snapshot in (pipeline + router views combine into
+    /// one report line).
+    pub fn merged(&self, other: &FaultStatsInner) -> FaultStatsInner {
+        FaultStatsInner {
+            retries: self.retries + other.retries,
+            backoff_time: self.backoff_time + other.backoff_time,
+            dropped_frames: self.dropped_frames + other.dropped_frames,
+            degraded_windows: self.degraded_windows + other.degraded_windows,
+            degraded_time: self.degraded_time + other.degraded_time,
+            degraded_frames: self.degraded_frames + other.degraded_frames,
+            aborted_switches: self.aborted_switches + other.aborted_switches,
+        }
+    }
+}
+
 /// Log-bucketed latency histogram (1 us .. ~100 s), lock-free enough for
 /// the request path via a mutex over u64 buckets (contention is per-frame,
 /// far below PJRT execution cost).
@@ -308,7 +397,7 @@ mod tests {
         let mut d = DowntimeRecord {
             total: Duration::from_millis(700),
             simulated: Duration::from_millis(300),
-            phases: vec![],
+            ..DowntimeRecord::default()
         };
         d.push_phase("pause", Duration::from_millis(300));
         d.push_phase("rebuild", Duration::from_millis(400));
@@ -352,6 +441,40 @@ mod tests {
         assert_eq!(s.wire_bytes, 2032);
         assert!((s.compression_ratio() - 8000.0 / 2032.0).abs() < 1e-12);
         assert_eq!(s.mean_codec_time(), Duration::from_micros(60));
+    }
+
+    #[test]
+    fn fault_stats_accumulate_and_merge() {
+        let f = FaultStats::new();
+        assert!(!f.snapshot().any(), "fresh stats are clean");
+        f.record_retry(Duration::from_millis(25));
+        f.record_retry(Duration::from_millis(50));
+        f.record_dropped_frame();
+        f.record_degraded_window(Duration::from_millis(400));
+        f.record_degraded_frame();
+        f.record_aborted_switch();
+        let s = f.snapshot();
+        assert!(s.any());
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.backoff_time, Duration::from_millis(75));
+        assert_eq!(s.dropped_frames, 1);
+        assert_eq!(s.degraded_windows, 1);
+        assert_eq!(s.degraded_time, Duration::from_millis(400));
+        assert_eq!(s.degraded_frames, 1);
+        assert_eq!(s.aborted_switches, 1);
+        let m = s.merged(&s);
+        assert_eq!(m.retries, 4);
+        assert_eq!(m.backoff_time, Duration::from_millis(150));
+        assert_eq!(m.aborted_switches, 2);
+    }
+
+    #[test]
+    fn downtime_record_marks_aborted_switches() {
+        let mut d = DowntimeRecord::default();
+        assert!(!d.aborted, "default record is a landed switch");
+        d.aborted = true;
+        d.push_phase("aborted-bringup", Duration::from_millis(100));
+        assert_eq!(d.phase("aborted-bringup"), Some(Duration::from_millis(100)));
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Deterministic link-fault injection (DESIGN.md §Fault model).
+//!
+//! The paper's link only ever changes *speed*; a real uplink also loses
+//! chunks, spikes in latency, and goes down outright. A [`FaultPlan`]
+//! attaches a time-windowed fault schedule to a [`super::Link`]: every
+//! chunk a transfer serialises consults the plan at the chunk's timeline
+//! instant, so faults compose with [`super::Link::schedule_bandwidth`]
+//! repricing on the same clock. Randomness (chunk loss) comes from the
+//! in-tree xorshift64* PRNG seeded explicitly — the same seed and
+//! schedule always fault the same chunks, which is what lets the
+//! failure-injection tests assert counters exactly.
+//!
+//! Configuration: `NEUKONFIG_FAULT_PROFILE` holds a `;`-separated list of
+//! windows, e.g. `loss:0.01@0..10;outage@5..6.5;spike:0.05@2..3`
+//! (seconds on the experiment timeline; `loss` takes a probability,
+//! `spike` an extra delay in seconds). `NEUKONFIG_FAULT_SEED` seeds the
+//! loss draws. Unset profile means no plan — the link is then
+//! byte- and duration-identical to the fault-free model.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::util::prng::Prng;
+
+/// One kind of injected fault, active inside a [`FaultWindow`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkFault {
+    /// Each chunk serialised inside the window is lost with this
+    /// probability (drawn from the plan's seeded PRNG). A lost chunk
+    /// aborts the transfer attempt after charging the wasted
+    /// serialisation time.
+    ChunkLoss { probability: f64 },
+    /// Every chunk inside the window pays `extra` on top of its
+    /// serialisation time (bufferbloat / retransmission stand-in).
+    LatencySpike { extra: Duration },
+    /// The link is down: a chunk that starts inside the window aborts
+    /// the attempt immediately, without charging that chunk.
+    Outage,
+}
+
+/// A fault active on the half-open timeline interval `[from, until)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    pub from: Duration,
+    pub until: Duration,
+    pub fault: LinkFault,
+}
+
+impl FaultWindow {
+    pub fn contains(&self, at: Duration) -> bool {
+        self.from <= at && at < self.until
+    }
+}
+
+/// A seeded, time-windowed fault schedule for one link.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    windows: Vec<FaultWindow>,
+    prng: Prng,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, mut windows: Vec<FaultWindow>) -> Self {
+        windows.sort_by_key(|w| w.from);
+        FaultPlan { windows, prng: Prng::new(seed) }
+    }
+
+    /// Parse `NEUKONFIG_FAULT_PROFILE` syntax. Lenient like the other env
+    /// knobs: malformed entries are skipped, an empty result is a plan
+    /// that never faults.
+    pub fn parse(profile: &str, seed: u64) -> Self {
+        FaultPlan::new(seed, parse_windows(profile))
+    }
+
+    /// Build from `NEUKONFIG_FAULT_PROFILE` / `NEUKONFIG_FAULT_SEED`.
+    /// `None` when no profile is set — the common, fault-free case.
+    pub fn from_env() -> Option<Self> {
+        let profile = std::env::var("NEUKONFIG_FAULT_PROFILE").ok()?;
+        if profile.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var("NEUKONFIG_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(DEFAULT_FAULT_SEED);
+        Some(FaultPlan::parse(&profile, seed))
+    }
+
+    /// The fault active at timeline instant `at`, if any. Windows are
+    /// consulted in start order; the first match wins, so an outage
+    /// listed before a loss window shadows it where they overlap.
+    pub fn fault_at(&self, at: Duration) -> Option<LinkFault> {
+        self.windows.iter().find(|w| w.contains(at)).map(|w| w.fault)
+    }
+
+    /// Seeded Bernoulli draw for a [`LinkFault::ChunkLoss`] window.
+    pub fn draw_loss(&mut self, probability: f64) -> bool {
+        self.prng.chance(probability)
+    }
+
+    pub fn windows(&self) -> &[FaultWindow] {
+        &self.windows
+    }
+}
+
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
+
+/// Parse the profile grammar: `kind[:param]@from..until` entries joined
+/// by `;`. Invalid entries (unknown kind, unparsable numbers, negative
+/// times, empty windows) are dropped, matching the lenient env-knob
+/// convention elsewhere in the tree.
+fn parse_windows(profile: &str) -> Vec<FaultWindow> {
+    profile.split(';').filter_map(parse_window).collect()
+}
+
+fn parse_window(entry: &str) -> Option<FaultWindow> {
+    let entry = entry.trim();
+    let (head, span) = entry.split_once('@')?;
+    let (from_s, until_s) = span.split_once("..")?;
+    let from = from_s.trim().parse::<f64>().ok().filter(|v| *v >= 0.0)?;
+    let until = until_s.trim().parse::<f64>().ok().filter(|v| *v > from)?;
+    let (kind, param) = match head.split_once(':') {
+        Some((k, p)) => (k.trim(), Some(p.trim())),
+        None => (head.trim(), None),
+    };
+    let fault = match kind {
+        "loss" => LinkFault::ChunkLoss {
+            probability: param?.parse::<f64>().ok().filter(|p| (0.0..=1.0).contains(p))?,
+        },
+        "spike" => LinkFault::LatencySpike {
+            extra: Duration::from_secs_f64(
+                param?.parse::<f64>().ok().filter(|v| *v >= 0.0)?,
+            ),
+        },
+        "outage" => LinkFault::Outage,
+        _ => return None,
+    };
+    Some(FaultWindow {
+        from: Duration::from_secs_f64(from),
+        until: Duration::from_secs_f64(until),
+        fault,
+    })
+}
+
+/// Which fault class ended a transfer attempt — carried by the errors so
+/// retry/exhaustion accounting can tell an outage from chunk loss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    ChunkLoss,
+    LatencySpike,
+    Outage,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::ChunkLoss => write!(f, "chunk loss"),
+            FaultKind::LatencySpike => write!(f, "latency spike"),
+            FaultKind::Outage => write!(f, "outage"),
+        }
+    }
+}
+
+/// One transfer *attempt* aborted by an injected fault. `elapsed` is the
+/// link time the failed attempt still consumed (queueing + latency +
+/// serialisation up to and including the lost chunk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferFault {
+    pub kind: FaultKind,
+    /// Index of the chunk the attempt died on.
+    pub chunk: usize,
+    pub elapsed: Duration,
+}
+
+impl fmt::Display for TransferFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "link fault ({}) at chunk {} after {:?}",
+            self.kind, self.chunk, self.elapsed
+        )
+    }
+}
+
+impl std::error::Error for TransferFault {}
+
+/// A whole transfer abandoned: every retry allowed by the
+/// [`RetryPolicy`] faulted, or the retry deadline passed. Runners
+/// downcast to this to drop the frame instead of failing the stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferAborted {
+    /// Attempts actually made (including the first).
+    pub attempts: u32,
+    pub last_fault: FaultKind,
+    pub deadline_exceeded: bool,
+    /// Link time consumed across all failed attempts.
+    pub elapsed: Duration,
+}
+
+impl fmt::Display for TransferAborted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.deadline_exceeded {
+            write!(
+                f,
+                "transfer abandoned: deadline passed after {} attempt(s) ({}), {:?} on the link",
+                self.attempts, self.last_fault, self.elapsed
+            )
+        } else {
+            write!(
+                f,
+                "transfer abandoned: {} attempt(s) exhausted ({}), {:?} on the link",
+                self.attempts, self.last_fault, self.elapsed
+            )
+        }
+    }
+}
+
+impl std::error::Error for TransferAborted {}
+
+/// Retry discipline for a faultable transfer: up to `max_attempts`
+/// tries, exponential backoff between them, and an optional overall
+/// deadline after which the frame is dropped (the Fig. 14/15 frame-drop
+/// regime) instead of wedging the stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub base_backoff: Duration,
+    pub deadline: Option<Duration>,
+}
+
+pub const DEFAULT_MAX_ATTEMPTS: u32 = 3;
+pub const DEFAULT_BASE_BACKOFF: Duration = Duration::from_millis(25);
+
+impl Default for RetryPolicy {
+    /// Reads the `NEUKONFIG_RETRY_*` env knobs, like
+    /// `BuildOptions::default` does for the codec.
+    fn default() -> Self {
+        RetryPolicy::from_env()
+    }
+}
+
+impl RetryPolicy {
+    /// The hard-coded defaults, ignoring the environment.
+    pub fn base() -> Self {
+        RetryPolicy {
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+            base_backoff: DEFAULT_BASE_BACKOFF,
+            deadline: None,
+        }
+    }
+
+    /// `NEUKONFIG_RETRY_MAX_ATTEMPTS` / `NEUKONFIG_RETRY_BACKOFF_MS` /
+    /// `NEUKONFIG_RETRY_DEADLINE_MS`, each falling back leniently.
+    pub fn from_env() -> Self {
+        let base = RetryPolicy::base();
+        RetryPolicy {
+            max_attempts: std::env::var("NEUKONFIG_RETRY_MAX_ATTEMPTS")
+                .ok()
+                .and_then(|s| s.trim().parse::<u32>().ok())
+                .filter(|n| *n > 0)
+                .unwrap_or(base.max_attempts),
+            base_backoff: std::env::var("NEUKONFIG_RETRY_BACKOFF_MS")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .map(Duration::from_millis)
+                .unwrap_or(base.base_backoff),
+            deadline: std::env::var("NEUKONFIG_RETRY_DEADLINE_MS")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .filter(|ms| *ms > 0)
+                .map(Duration::from_millis),
+        }
+    }
+
+    /// Backoff slept before the given 1-based attempt: nothing before
+    /// the first, then `base * 2^(attempt - 2)` (exponent capped so a
+    /// huge attempt count cannot overflow the shift).
+    pub fn backoff_before(&self, attempt: u32) -> Duration {
+        if attempt <= 1 {
+            return Duration::ZERO;
+        }
+        self.base_backoff * (1u32 << (attempt - 2).min(16))
+    }
+}
+
+/// Per-link fault counters, snapshot via [`super::Link::fault_counters`].
+/// These count *link-level* events; retry/drop accounting lives in
+/// `metrics::FaultStats` at the pipeline layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkFaultCounters {
+    /// Chunks lost to [`LinkFault::ChunkLoss`] draws.
+    pub chunks_lost: u64,
+    /// Chunks that paid a [`LinkFault::LatencySpike`] surcharge.
+    pub latency_spike_chunks: u64,
+    /// Transfer attempts aborted by an [`LinkFault::Outage`] window.
+    pub outage_aborts: u64,
+    /// Transfer attempts that ended in any fault.
+    pub failed_transfers: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: f64) -> Duration {
+        Duration::from_secs_f64(s)
+    }
+
+    #[test]
+    fn parses_full_profile() {
+        let ws = parse_windows("loss:0.01@0..10;outage@5..6.5;spike:0.05@2..3");
+        assert_eq!(ws.len(), 3);
+        assert_eq!(
+            ws[0],
+            FaultWindow {
+                from: secs(0.0),
+                until: secs(10.0),
+                fault: LinkFault::ChunkLoss { probability: 0.01 },
+            }
+        );
+        assert_eq!(
+            ws[1],
+            FaultWindow { from: secs(5.0), until: secs(6.5), fault: LinkFault::Outage }
+        );
+        assert_eq!(
+            ws[2],
+            FaultWindow {
+                from: secs(2.0),
+                until: secs(3.0),
+                fault: LinkFault::LatencySpike { extra: secs(0.05) },
+            }
+        );
+    }
+
+    #[test]
+    fn skips_malformed_entries() {
+        assert!(parse_windows("").is_empty());
+        assert!(parse_windows("loss@0..1").is_empty()); // loss needs a probability
+        assert!(parse_windows("loss:1.5@0..1").is_empty()); // p > 1
+        assert!(parse_windows("loss:0.1@-1..1").is_empty()); // negative time
+        assert!(parse_windows("loss:0.1@2..1").is_empty()); // empty window
+        assert!(parse_windows("flood:0.1@0..1").is_empty()); // unknown kind
+        assert!(parse_windows("outage@nope..1").is_empty());
+        // One bad entry does not sink its neighbours.
+        let ws = parse_windows("garbage;outage@1..2; loss:0.5@0..4 ");
+        assert_eq!(ws.len(), 2);
+    }
+
+    #[test]
+    fn first_window_in_start_order_wins() {
+        let plan = FaultPlan::parse("loss:0.5@0..10;outage@2..4", 1);
+        assert_eq!(
+            plan.fault_at(secs(3.0)),
+            Some(LinkFault::ChunkLoss { probability: 0.5 }),
+            "windows sort by start; earlier-starting window shadows"
+        );
+        assert_eq!(plan.fault_at(secs(20.0)), None);
+        // Half-open: the instant a window ends, it no longer applies.
+        let plan = FaultPlan::parse("outage@1..2", 1);
+        assert_eq!(plan.fault_at(secs(1.0)), Some(LinkFault::Outage));
+        assert_eq!(plan.fault_at(secs(2.0)), None);
+    }
+
+    #[test]
+    fn loss_draws_are_seed_deterministic() {
+        let mut a = FaultPlan::parse("loss:0.3@0..1", 42);
+        let mut b = FaultPlan::parse("loss:0.3@0..1", 42);
+        let draws_a: Vec<bool> = (0..64).map(|_| a.draw_loss(0.3)).collect();
+        let draws_b: Vec<bool> = (0..64).map(|_| b.draw_loss(0.3)).collect();
+        assert_eq!(draws_a, draws_b);
+        assert!(draws_a.iter().any(|d| *d));
+        assert!(draws_a.iter().any(|d| !*d));
+    }
+
+    #[test]
+    fn backoff_doubles_from_second_retry() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(10),
+            deadline: None,
+        };
+        assert_eq!(p.backoff_before(1), Duration::ZERO);
+        assert_eq!(p.backoff_before(2), Duration::from_millis(10));
+        assert_eq!(p.backoff_before(3), Duration::from_millis(20));
+        assert_eq!(p.backoff_before(4), Duration::from_millis(40));
+        // Exponent caps instead of overflowing.
+        assert_eq!(p.backoff_before(100), Duration::from_millis(10) * (1 << 16));
+    }
+
+    #[test]
+    fn policy_base_defaults() {
+        let p = RetryPolicy::base();
+        assert_eq!(p.max_attempts, DEFAULT_MAX_ATTEMPTS);
+        assert_eq!(p.base_backoff, DEFAULT_BASE_BACKOFF);
+        assert_eq!(p.deadline, None);
+    }
+
+    #[test]
+    fn errors_display_their_cause() {
+        let f = TransferFault {
+            kind: FaultKind::Outage,
+            chunk: 3,
+            elapsed: Duration::from_millis(7),
+        };
+        assert!(f.to_string().contains("outage"));
+        let a = TransferAborted {
+            attempts: 3,
+            last_fault: FaultKind::ChunkLoss,
+            deadline_exceeded: false,
+            elapsed: Duration::from_millis(9),
+        };
+        assert!(a.to_string().contains("3 attempt(s) exhausted"));
+        let d = TransferAborted { deadline_exceeded: true, ..a };
+        assert!(d.to_string().contains("deadline"));
+    }
+}

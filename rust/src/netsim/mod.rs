@@ -15,11 +15,25 @@
 //! segment with the same arithmetic as [`transfer_time`], so a transfer
 //! that sees no rate change is *bitwise-identical* in cost to the
 //! unchunked model.
+//!
+//! Links can also *fail*: [`Link::install_fault_plan`] attaches a
+//! deterministic, seeded [`FaultPlan`] (chunk loss, latency spikes,
+//! outages — see [`fault`]) and [`Link::try_transfer_chunked`] then
+//! reports per-attempt faults instead of always succeeding. With no
+//! plan installed every code path below is unchanged, bit for bit.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::clock::Clock;
+use crate::util::sync::lock_clean;
+
+pub mod fault;
+
+pub use fault::{
+    FaultKind, FaultPlan, FaultWindow, LinkFault, LinkFaultCounters, RetryPolicy,
+    TransferAborted, TransferFault,
+};
 
 /// A point-to-point shaped link (edge -> cloud uplink).
 pub struct Link {
@@ -40,6 +54,10 @@ struct LinkState {
     /// the timeline reaches them: at chunk boundaries inside a transfer,
     /// and on any state read that knows the current time.
     pending: Vec<(Duration, f64)>,
+    /// Injected fault schedule; `None` (the default) means the link is
+    /// the original always-succeeds model.
+    fault: Option<FaultPlan>,
+    faults: LinkFaultCounters,
 }
 
 impl LinkState {
@@ -70,6 +88,8 @@ impl Link {
                 transfers: 0,
                 chunks: 0,
                 pending: Vec::new(),
+                fault: None,
+                faults: LinkFaultCounters::default(),
             }),
             clock,
         }
@@ -79,7 +99,7 @@ impl Link {
     /// serialisation at the current bandwidth. Applies any scheduled
     /// bandwidth events that are already due; no other side effects.
     pub fn transfer_time(&self, bytes: usize) -> Duration {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         s.apply_pending(self.clock.now());
         transfer_time(bytes, s.bandwidth_mbps, s.latency)
     }
@@ -100,9 +120,32 @@ impl Link {
     /// costing segment using [`transfer_time`]'s arithmetic, so with a
     /// constant bandwidth the cost is bit-identical to the unchunked model.
     pub fn transfer_chunked(&self, bytes: usize, chunk_bytes: usize) -> Duration {
+        self.try_transfer_chunked(bytes, chunk_bytes).unwrap_or_else(|f| {
+            panic!(
+                "injected link fault with no retry handling: {f}; \
+                 use try_transfer_chunked behind a RetryPolicy"
+            )
+        })
+    }
+
+    /// [`Self::transfer_chunked`] that can fail. Each chunk consults the
+    /// installed [`FaultPlan`] at the timeline instant it starts
+    /// serialising — the same instant bandwidth events are applied, so
+    /// faults and repricing compose on one clock. A fault ends the
+    /// *attempt*: the time already burnt (queueing, latency, chunks
+    /// serialised so far — including a lost chunk's serialisation, but
+    /// not an outage-aborted chunk) still occupies the link and advances
+    /// the clock, and the error reports it as `elapsed`. With no plan
+    /// installed the cost arithmetic is bit-identical to
+    /// [`Self::transfer_chunked`]'s historical behaviour.
+    pub fn try_transfer_chunked(
+        &self,
+        bytes: usize,
+        chunk_bytes: usize,
+    ) -> Result<Duration, TransferFault> {
         let chunk = chunk_bytes.max(1);
-        let (wait, cost) = {
-            let mut s = self.state.lock().unwrap();
+        let (wait, cost, faulted) = {
+            let mut s = lock_clean(&self.state);
             let now = self.clock.now();
             let start = s.busy_until.max(now);
             // Serialisation begins once the propagation latency has passed.
@@ -110,34 +153,107 @@ impl Link {
             s.apply_pending(ser_start);
             let n_chunks = if bytes == 0 { 0 } else { bytes.div_ceil(chunk) };
             let mut done_secs = 0.0f64; // serialisation of closed segments
+            let mut fault_secs = 0.0f64; // latency-spike surcharges
             let mut seg_bytes = 0usize; // bytes in the open segment
             let mut seg_bw = s.bandwidth_mbps;
             let mut sent = 0usize;
-            for _ in 0..n_chunks {
+            let mut chunks_tried = 0u64;
+            let mut faulted: Option<TransferFault> = None;
+            for i in 0..n_chunks {
                 // Instant this chunk starts serialising; fire any events
                 // due by then and close the segment if the rate moved.
                 let at = ser_start
-                    + Duration::from_secs_f64(done_secs + seg_secs(seg_bytes, seg_bw));
+                    + Duration::from_secs_f64(
+                        done_secs + fault_secs + seg_secs(seg_bytes, seg_bw),
+                    );
                 s.apply_pending(at);
                 if s.bandwidth_mbps != seg_bw {
                     done_secs += seg_secs(seg_bytes, seg_bw);
                     seg_bytes = 0;
                     seg_bw = s.bandwidth_mbps;
                 }
+                match s.fault.as_ref().and_then(|p| p.fault_at(at)) {
+                    Some(LinkFault::Outage) => {
+                        s.faults.outage_aborts += 1;
+                        faulted = Some(TransferFault {
+                            kind: FaultKind::Outage,
+                            chunk: i,
+                            elapsed: Duration::ZERO, // filled below
+                        });
+                        break;
+                    }
+                    Some(LinkFault::ChunkLoss { probability }) => {
+                        let lost = s
+                            .fault
+                            .as_mut()
+                            .map(|p| p.draw_loss(probability))
+                            .unwrap_or(false);
+                        if lost {
+                            // The lost chunk's serialisation is burnt
+                            // wire time: charge it, then abort.
+                            let this = chunk.min(bytes - sent);
+                            seg_bytes += this;
+                            sent += this;
+                            chunks_tried += 1;
+                            s.faults.chunks_lost += 1;
+                            faulted = Some(TransferFault {
+                                kind: FaultKind::ChunkLoss,
+                                chunk: i,
+                                elapsed: Duration::ZERO,
+                            });
+                            break;
+                        }
+                    }
+                    Some(LinkFault::LatencySpike { extra }) => {
+                        fault_secs += extra.as_secs_f64();
+                        s.faults.latency_spike_chunks += 1;
+                    }
+                    None => {}
+                }
                 let this = chunk.min(bytes - sent);
                 seg_bytes += this;
                 sent += this;
+                chunks_tried += 1;
             }
             done_secs += seg_secs(seg_bytes, seg_bw);
-            let cost = s.latency + Duration::from_secs_f64(done_secs);
+            let cost = s.latency + Duration::from_secs_f64(done_secs + fault_secs);
             s.busy_until = start + cost;
-            s.bytes_sent += bytes as u64;
+            s.bytes_sent += sent as u64;
             s.transfers += 1;
-            s.chunks += n_chunks as u64;
-            (start - now, cost)
+            s.chunks += chunks_tried;
+            if faulted.is_some() {
+                s.faults.failed_transfers += 1;
+            }
+            (start - now, cost, faulted)
         };
         self.clock.sleep(wait + cost);
-        wait + cost
+        match faulted {
+            Some(mut f) => {
+                f.elapsed = wait + cost;
+                Err(f)
+            }
+            None => Ok(wait + cost),
+        }
+    }
+
+    /// Attach a fault schedule; subsequent transfers consult it chunk by
+    /// chunk. Replaces any previous plan (and its PRNG position).
+    pub fn install_fault_plan(&self, plan: FaultPlan) {
+        lock_clean(&self.state).fault = Some(plan);
+    }
+
+    /// Remove the fault schedule, restoring the always-succeeds link.
+    pub fn clear_fault_plan(&self) {
+        lock_clean(&self.state).fault = None;
+    }
+
+    pub fn has_fault_plan(&self) -> bool {
+        lock_clean(&self.state).fault.is_some()
+    }
+
+    /// Link-level fault counters (chunks lost, spiked, aborted attempts).
+    pub fn fault_counters(&self) -> LinkFaultCounters {
+        lock_clean(&self.state).faults
     }
 
     /// Change the shaped bandwidth immediately (the `tc` rate update that
@@ -146,7 +262,7 @@ impl Link {
     /// the simulated timeline.
     pub fn set_bandwidth(&self, mbps: f64) {
         assert!(mbps > 0.0);
-        self.state.lock().unwrap().bandwidth_mbps = mbps;
+        lock_clean(&self.state).bandwidth_mbps = mbps;
     }
 
     /// Schedule a bandwidth change at timeline instant `at`. Chunked
@@ -155,32 +271,32 @@ impl Link {
     /// where a whole transfer is costed inside one lock.
     pub fn schedule_bandwidth(&self, at: Duration, mbps: f64) {
         assert!(mbps > 0.0);
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         s.pending.push((at, mbps));
         s.pending.sort_by_key(|e| e.0);
     }
 
     pub fn bandwidth_mbps(&self) -> f64 {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         s.apply_pending(self.clock.now());
         s.bandwidth_mbps
     }
 
     pub fn latency(&self) -> Duration {
-        self.state.lock().unwrap().latency
+        lock_clean(&self.state).latency
     }
 
     pub fn bytes_sent(&self) -> u64 {
-        self.state.lock().unwrap().bytes_sent
+        lock_clean(&self.state).bytes_sent
     }
 
     pub fn transfers(&self) -> u64 {
-        self.state.lock().unwrap().transfers
+        lock_clean(&self.state).transfers
     }
 
     /// Total chunks shipped across all transfers.
     pub fn chunks(&self) -> u64 {
-        self.state.lock().unwrap().chunks
+        lock_clean(&self.state).chunks
     }
 }
 
@@ -403,5 +519,118 @@ mod tests {
     #[should_panic]
     fn rejects_zero_bandwidth() {
         sim_link(0.0);
+    }
+
+    #[test]
+    fn outage_mid_transfer_aborts_and_charges_time_spent() {
+        // 2 MB at 8 Mbps is 2 s clean; the link goes down at t = 0.5 s.
+        // Chunks serialised before the outage succeed, the first chunk
+        // that starts inside the window aborts the attempt without being
+        // charged — so the failed attempt costs ~0.5 s, not 2 s.
+        let clock = Clock::simulated();
+        let l = Link::new(clock.clone(), 8.0, Duration::ZERO);
+        l.install_fault_plan(FaultPlan::new(
+            1,
+            vec![FaultWindow {
+                from: Duration::from_millis(500),
+                until: Duration::from_secs(5),
+                fault: LinkFault::Outage,
+            }],
+        ));
+        let err = l.try_transfer_chunked(2_000_000, 65_536).unwrap_err();
+        assert_eq!(err.kind, FaultKind::Outage);
+        assert!(
+            err.elapsed >= Duration::from_millis(450) && err.elapsed < Duration::from_millis(600),
+            "aborted attempt should charge only the pre-outage chunks: {:?}",
+            err.elapsed
+        );
+        assert_eq!(clock.now(), err.elapsed, "burnt time advances the clock");
+        let c = l.fault_counters();
+        assert_eq!(c.outage_aborts, 1);
+        assert_eq!(c.failed_transfers, 1);
+        assert_eq!(c.chunks_lost, 0);
+        // Bytes that made it onto the wire before the outage are counted.
+        assert!(l.bytes_sent() > 0 && l.bytes_sent() < 2_000_000);
+    }
+
+    #[test]
+    fn certain_chunk_loss_kills_the_first_chunk() {
+        // probability 1.0: the very first chunk is lost, after paying its
+        // own serialisation (64 KiB at 8 Mbps = 65.536 ms).
+        let l = sim_link(8.0);
+        l.install_fault_plan(FaultPlan::parse("loss:1@0..1000", 7));
+        let err = l.try_transfer_chunked(1_000_000, 65_536).unwrap_err();
+        assert_eq!(err.kind, FaultKind::ChunkLoss);
+        assert_eq!(err.chunk, 0);
+        let expect = transfer_time(65_536, 8.0, Duration::from_millis(20));
+        assert_eq!(err.elapsed, expect, "lost chunk's serialisation is charged");
+        let c = l.fault_counters();
+        assert_eq!(c.chunks_lost, 1);
+        assert_eq!(c.failed_transfers, 1);
+    }
+
+    #[test]
+    fn loss_outcomes_are_seed_deterministic() {
+        let run = |seed: u64| {
+            let l = sim_link(8.0);
+            l.install_fault_plan(FaultPlan::parse("loss:0.2@0..1000", seed));
+            let outcomes: Vec<Result<Duration, TransferFault>> =
+                (0..8).map(|_| l.try_transfer_chunked(500_000, 65_536)).collect();
+            (outcomes, l.fault_counters())
+        };
+        let (a, ca) = run(42);
+        let (b, cb) = run(42);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+        assert!(ca.chunks_lost > 0, "p=0.2 over ~64 chunks should lose some");
+        let (c, _) = run(43);
+        assert_ne!(a, c, "different seed, different loss pattern");
+    }
+
+    #[test]
+    fn latency_spike_surcharges_each_chunk() {
+        // 1 MB in 16 x 64 KiB chunks, every chunk inside a 10 ms spike
+        // window: cost = clean + 16 * 10 ms (within f64 rounding).
+        let clean = transfer_time(1_000_000, 8.0, Duration::from_millis(20));
+        let l = sim_link(8.0);
+        l.install_fault_plan(FaultPlan::parse("spike:0.01@0..1000", 1));
+        let t = l.try_transfer_chunked(1_000_000, 65_536).unwrap();
+        let surcharge = t - clean;
+        assert!(
+            surcharge > Duration::from_millis(159) && surcharge < Duration::from_millis(161),
+            "16 spiked chunks should add ~160 ms, got {surcharge:?}"
+        );
+        assert_eq!(l.fault_counters().latency_spike_chunks, 16);
+        assert_eq!(l.fault_counters().failed_transfers, 0, "spikes slow, never fail");
+    }
+
+    #[test]
+    fn idle_plan_is_cost_identical_to_no_plan() {
+        // A plan whose windows never cover the transfer must not perturb
+        // the cost by a single bit (the no-fault identity property).
+        let clean = sim_link(20.0).transfer_chunked(1_000_000, 65_536);
+        let l = sim_link(20.0);
+        l.install_fault_plan(FaultPlan::parse("outage@100000..100001", 1));
+        assert_eq!(l.try_transfer_chunked(1_000_000, 65_536).unwrap(), clean);
+        assert_eq!(l.fault_counters(), LinkFaultCounters::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "injected link fault")]
+    fn infallible_transfer_panics_on_fault() {
+        let l = sim_link(8.0);
+        l.install_fault_plan(FaultPlan::parse("outage@0..10", 1));
+        l.transfer_chunked(1_000_000, 65_536);
+    }
+
+    #[test]
+    fn clear_fault_plan_restores_the_clean_link() {
+        let l = sim_link(8.0);
+        l.install_fault_plan(FaultPlan::parse("outage@0..1000000", 1));
+        assert!(l.has_fault_plan());
+        assert!(l.try_transfer_chunked(100_000, 65_536).is_err());
+        l.clear_fault_plan();
+        assert!(!l.has_fault_plan());
+        assert!(l.try_transfer_chunked(100_000, 65_536).is_ok());
     }
 }

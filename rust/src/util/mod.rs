@@ -5,3 +5,4 @@
 pub mod json;
 pub mod prng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,63 @@
+//! Poison-recovering lock helpers — substrate module.
+//!
+//! A panicking stage thread poisons every mutex it holds; the default
+//! `lock().unwrap()` then cascades that panic into whichever thread
+//! touches the lock next (the router, the monitor, a draining stage).
+//! All the state these locks guard is plain counters and schedules that
+//! stay internally consistent at every await point, so recovery is
+//! always safe: take the guard out of the `PoisonError` and carry on.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_clean<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_clean<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_clean_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_clean(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_clean(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_clean_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(3usize));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*read_clean(&l), 3);
+        *write_clean(&l) = 4;
+        assert_eq!(*read_clean(&l), 4);
+    }
+}

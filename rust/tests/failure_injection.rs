@@ -4,13 +4,17 @@
 //! originating stage and frame index, without hangs or partial reports.
 
 use std::fs;
+use std::sync::Arc;
+use std::time::Duration;
 
 use neukonfig::coordinator::experiments::ExperimentSetup;
 use neukonfig::coordinator::{
-    Pipeline, PipelinedRunner, Placement, PipelineState, PlacementCase, RouteOutcome, ScenarioA,
+    arm_degraded_fallback, Pipeline, PipelinedRunner, Placement, PipelineState, PlacementCase,
+    RouteOutcome, Router, ScenarioA, ScenarioB,
 };
 use neukonfig::device::FrameSource;
 use neukonfig::models::{default_artifacts_dir, ArtifactIndex, ModelManifest};
+use neukonfig::netsim::{FaultPlan, RetryPolicy};
 use neukonfig::runtime::{literal_from_f32, ChainExecutor, Domain, WeightStore};
 
 fn with_artifact_copy(model: &str, f: impl FnOnce(&std::path::Path)) {
@@ -270,9 +274,7 @@ fn racing_switch_during_pipelined_burst_is_clean() {
                         RouteOutcome::Processed(rep) => {
                             assert!(rep.output.to_vec::<f32>().is_ok(), "frame {i} corrupted")
                         }
-                        RouteOutcome::DroppedPaused => {
-                            panic!("frame {i} dropped: router never paused")
-                        }
+                        _ => panic!("frame {i} dropped: no pause or fault was injected"),
                     }
                 }
             }
@@ -285,6 +287,197 @@ fn racing_switch_during_pipelined_burst_is_clean() {
     // After the dust settles the router still serves frames.
     match router.route(&frames[0]).unwrap() {
         RouteOutcome::Processed(_) => {}
-        RouteOutcome::DroppedPaused => panic!("router wedged after racing switches"),
+        _ => panic!("router wedged after racing switches"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Injected link faults: outages, retry exhaustion, degraded serving, and
+// switch rollback (seeded + windowed, so every counter is asserted exactly)
+// ---------------------------------------------------------------------------
+
+/// A permanent outage window starting at t=0, shadowing everything.
+fn total_outage(seed: u64) -> FaultPlan {
+    FaultPlan::parse("outage@0..1000000", seed)
+}
+
+/// Link outage mid-stream: every transfer attempt aborts, so the
+/// pipelined runner *drops* each frame after its retries — returning an
+/// empty (not partial, not erroring) report set in both stage modes —
+/// and the link/pipeline counters match the injected schedule exactly.
+#[test]
+fn link_outage_drops_frames_without_failing_the_runner() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    let mut p = env.build_pipeline(n / 2, Placement::NewContainers).unwrap();
+    p.retry = RetryPolicy {
+        max_attempts: 2,
+        base_backoff: Duration::from_millis(1),
+        deadline: None,
+    };
+    p.transition(PipelineState::Active).unwrap();
+
+    env.link.clear_fault_plan(); // isolate from any ambient profile
+    env.link.install_fault_plan(total_outage(11));
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 3);
+    let frames: Vec<_> = (0..4)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+    for runner in [PipelinedRunner::new(2), PipelinedRunner::two_stage(2)] {
+        let reports = runner.run(&p, &frames).unwrap();
+        assert!(
+            reports.is_empty(),
+            "{:?}: every frame should drop on a dead link, got {} reports",
+            runner.stages,
+            reports.len()
+        );
+    }
+
+    // 4 frames x 2 attempts x 2 runner modes, every attempt an outage.
+    let link = env.link.fault_counters();
+    assert_eq!(link.outage_aborts, 16);
+    assert_eq!(link.failed_transfers, 16);
+    assert_eq!(link.chunks_lost, 0);
+    let stats = p.fault_stats.snapshot();
+    assert_eq!(stats.retries, 8, "one retry per frame per mode");
+    assert_eq!(stats.dropped_frames, 8);
+
+    // Clearing the plan restores full service on the same pipeline.
+    env.link.clear_fault_plan();
+    let reports = PipelinedRunner::new(2).run(&p, &frames).unwrap();
+    assert_eq!(reports.len(), frames.len(), "clean link must serve again");
+}
+
+/// Retry exhaustion with a fallback armed: the faulted frame drops, the
+/// router flips to edge-only (degraded) serving, and a later successful
+/// switch closes the window — with every counter pinned to the schedule.
+#[test]
+fn retry_exhaustion_flips_serving_to_the_edge_only_fallback() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    let mut p = env.build_pipeline(n / 2, Placement::NewContainers).unwrap();
+    p.retry = RetryPolicy {
+        max_attempts: 3,
+        base_backoff: Duration::from_millis(1),
+        deadline: None,
+    };
+    let active = Arc::new(p);
+    let router = Router::new(env.clock.clone(), active.clone()).unwrap();
+    arm_degraded_fallback(&env, &router).unwrap();
+
+    env.link.clear_fault_plan();
+    env.link.install_fault_plan(total_outage(5));
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 4);
+    let frames: Vec<_> = (0..4)
+        .map(|i| env.frame_literal(&cam.frame(i)).unwrap())
+        .collect();
+
+    // Frame 0 exhausts its 3 attempts and drops...
+    match router.route(&frames[0]).unwrap() {
+        RouteOutcome::DroppedFaulted => {}
+        _ => panic!("first faulted frame must drop"),
+    }
+    assert!(router.in_degraded(), "exhaustion must open the degraded window");
+
+    // ...and the window serves the rest edge-only, off the link entirely.
+    for (i, f) in frames[1..].iter().enumerate() {
+        match router.route(f).unwrap() {
+            RouteOutcome::Degraded(rep) => {
+                assert!(rep.output.to_vec::<f32>().is_ok(), "frame {} corrupted", i + 1);
+                assert_eq!(rep.transfer_attempts, 0);
+                assert_eq!(rep.t_transfer, Duration::ZERO);
+            }
+            _ => panic!("frame {} should serve degraded", i + 1),
+        }
+    }
+
+    let link = env.link.fault_counters();
+    assert_eq!(link.outage_aborts, 3, "exactly the dropped frame's attempts");
+    assert_eq!(link.failed_transfers, 3);
+    let pstats = active.fault_stats.snapshot();
+    assert_eq!(pstats.retries, 2);
+    assert_eq!(pstats.dropped_frames, 1);
+    let rstats = router.fault_stats.snapshot();
+    assert_eq!(rstats.degraded_frames, 3);
+    assert_eq!(rstats.degraded_windows, 0, "window still open — not yet counted");
+
+    // The cure is a successful switch: link heals, new pipeline swaps in,
+    // the degraded window closes and is credited.
+    env.link.clear_fault_plan();
+    let replacement = Arc::new(env.build_pipeline(n / 3, Placement::NewContainers).unwrap());
+    router.switch(replacement).unwrap();
+    assert!(!router.in_degraded());
+    let rstats = router.fault_stats.snapshot();
+    assert_eq!(rstats.degraded_windows, 1);
+    assert!(rstats.degraded_time > Duration::ZERO);
+    match router.route(&frames[0]).unwrap() {
+        RouteOutcome::Processed(_) => {}
+        _ => panic!("router must serve normally after the switch"),
+    }
+}
+
+/// A repartition whose pre-swap probe fails (dead link) must roll back:
+/// the router stays on the old pipeline, the record is marked aborted
+/// with an `aborted-switch` phase, and once the link heals the very same
+/// repartition goes through.
+#[test]
+fn failed_switch_probe_rolls_back_to_the_old_pipeline() {
+    let Ok(setup) = ExperimentSetup::load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let env = setup.env(MODEL).unwrap();
+    let n = env.manifest.num_layers();
+    assert!(n >= 4, "test needs at least 4 layers");
+    let strat = ScenarioB::deploy(env.clone(), n / 2)
+        .unwrap()
+        .with_case(PlacementCase::SameContainer);
+    let router = strat.router.clone();
+    let old = router.active();
+
+    let cam = FrameSource::new(&env.manifest.input_shape, 15.0, 8);
+    let probe = env.frame_literal(&cam.frame(0)).unwrap();
+    match router.route(&probe).unwrap() {
+        RouteOutcome::Processed(_) => {}
+        _ => panic!("should serve before the fault"),
+    }
+
+    // Link down: the new pipeline's probe exhausts its retries, so the
+    // guarded repartition aborts instead of swapping.
+    env.link.clear_fault_plan();
+    env.link.install_fault_plan(total_outage(9));
+    let rec = strat.repartition_guarded(n / 3, &probe).unwrap();
+    assert!(rec.aborted, "record must mark the rolled-back switch");
+    assert!(
+        rec.phases.iter().any(|(name, _)| name == "aborted-switch"),
+        "phases: {:?}",
+        rec.phases
+    );
+    assert!(
+        Arc::ptr_eq(&old, &router.active()),
+        "router must stay on the old pipeline"
+    );
+    assert_eq!(router.fault_stats.snapshot().aborted_switches, 1);
+
+    // The old pipeline still serves once the link heals, and the same
+    // repartition now succeeds.
+    env.link.clear_fault_plan();
+    match router.route(&probe).unwrap() {
+        RouteOutcome::Processed(_) => {}
+        _ => panic!("old pipeline must keep serving after the rollback"),
+    }
+    let rec = strat.repartition_guarded(n / 3, &probe).unwrap();
+    assert!(!rec.aborted);
+    assert!(!Arc::ptr_eq(&old, &router.active()), "healed repartition must swap");
+    assert_eq!(router.active().split, n / 3);
 }

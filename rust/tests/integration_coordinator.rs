@@ -246,7 +246,7 @@ fn router_serves_and_drops_frames() {
                 assert!(rep.total() > std::time::Duration::ZERO);
                 assert!(rep.t_transfer >= env.cfg.network.latency);
             }
-            RouteOutcome::DroppedPaused => panic!("should not drop while active"),
+            _ => panic!("should process, not drop, while active"),
         }
     }
 
