@@ -1,0 +1,20 @@
+//! Fixture: trips `bare_lock` (3 findings — same-line, split-chain, and
+//! expect-variant). Exercised by rust/tests/lint_fixtures.rs and by
+//! `cargo run --bin neukonfig_lint -- rust/lint_fixtures/bare_lock.rs`
+//! (expected exit status: 1). Not compiled into the crate.
+
+use std::sync::{Mutex, RwLock};
+
+pub fn same_line(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+pub fn split_chain(m: &Mutex<u32>) -> u32 {
+    *m
+        .lock()
+        .unwrap()
+}
+
+pub fn expect_variant(l: &RwLock<u32>) -> u32 {
+    *l.read().expect("poisoned")
+}

@@ -1,0 +1,28 @@
+//! Fixture: clean file — zero findings expected, including the waived
+//! wall-clock read (allow marker) and the test-only sleep. Not compiled.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub fn helper_style_lock(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+pub fn waived_wall_clock() -> Instant {
+    // neukonfig_lint: allow(wall_clock) — fixture demonstrating the waiver
+    Instant::now()
+}
+
+pub fn bounded_channel() {
+    let (_tx, _rx) = std::sync::mpsc::sync_channel::<u32>(1);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_sleep_and_unwrap() {
+        let m = std::sync::Mutex::new(1u32);
+        let _ = *m.lock().unwrap();
+        std::thread::sleep(super::Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,18 @@
+//! Fixture: trips `unbounded_channel` (2 findings). Lives under a
+//! `coordinator/` path segment because the rule is scoped to coordinator
+//! hand-off code; the bounded `sync_channel` below must NOT count.
+//! Not compiled.
+
+use std::sync::mpsc;
+
+pub fn unbounded_handoff() -> (mpsc::Sender<u64>, mpsc::Receiver<u64>) {
+    mpsc::channel()
+}
+
+pub fn unbounded_turbofish() {
+    let (_tx, _rx) = mpsc::channel::<u64>();
+}
+
+pub fn bounded_is_fine() {
+    let (_tx, _rx) = mpsc::sync_channel::<u64>(2);
+}

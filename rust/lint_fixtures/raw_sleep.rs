@@ -1,0 +1,7 @@
+//! Fixture: trips `raw_sleep` (1 finding). Not compiled.
+
+use std::time::Duration;
+
+pub fn blocking_wait() {
+    std::thread::sleep(Duration::from_millis(50));
+}

@@ -1,0 +1,12 @@
+//! Fixture: trips `unsafe_code` (2 findings — a block and an unsafe fn).
+//! The SAFETY comment on the first one does not help: the file is not on
+//! the allowlist, and the rule requires BOTH. Not compiled.
+
+pub fn reinterprets(data: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding and align(4) >= align(1).
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) }
+}
+
+pub unsafe fn raw_write(p: *mut u8) {
+    *p = 0;
+}

@@ -1,0 +1,14 @@
+//! Fixture: trips `wall_clock` (2 findings). The string and comment
+//! mentions of Instant::now() below must NOT count. Not compiled.
+
+use std::time::{Instant, SystemTime};
+
+pub fn stray_monotonic() -> Instant {
+    // A comment saying Instant::now() is fine.
+    let _doc = "so is Instant::now() in a string";
+    Instant::now()
+}
+
+pub fn stray_wall() -> SystemTime {
+    SystemTime::now()
+}

@@ -5,8 +5,9 @@
 //! binary prints. Kept in the library so benches, examples, and the CLI
 //! share one implementation.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::clock::Stopwatch;
 use crate::metrics::Table;
 use crate::util::stats::Summary;
 
@@ -62,10 +63,10 @@ pub fn bench(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> BenchResult 
     for _ in 0..cfg.warmup_iters {
         f();
     }
-    let started = Instant::now();
+    let started = Stopwatch::start();
     let mut samples = Vec::with_capacity(cfg.iters);
     for _ in 0..cfg.iters {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         f();
         samples.push(t0.elapsed().as_secs_f64());
         if started.elapsed() > cfg.max_time {
@@ -89,7 +90,7 @@ pub fn bench_measured(
     for _ in 0..cfg.warmup_iters {
         f();
     }
-    let started = Instant::now();
+    let started = Stopwatch::start();
     let mut samples = Vec::with_capacity(cfg.iters);
     for _ in 0..cfg.iters {
         samples.push(f().as_secs_f64());

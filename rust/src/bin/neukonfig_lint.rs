@@ -1,0 +1,64 @@
+//! `neukonfig_lint` — enforce the repo's concurrency/determinism
+//! invariants as hard errors (see `neukonfig::lint` for the rules and
+//! DESIGN.md §Concurrency invariants for the rationale).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin neukonfig_lint              # lint rust/src (the tree)
+//! cargo run --bin neukonfig_lint -- PATH...   # lint specific files/dirs
+//! ```
+//!
+//! Exit status: 0 when clean, 1 when any rule fires, 2 on I/O failure.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use neukonfig::lint::{lint_tree, LintConfig, Rule};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from("rust/src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let cfg = LintConfig::default();
+    let mut findings = Vec::new();
+    for root in &roots {
+        match lint_tree(root, &cfg) {
+            Ok(f) => findings.extend(f),
+            Err(e) => {
+                eprintln!("neukonfig_lint: cannot read {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if findings.is_empty() {
+        println!(
+            "neukonfig_lint: clean ({} rule{} over {})",
+            Rule::ALL.len(),
+            if Rule::ALL.len() == 1 { "" } else { "s" },
+            roots
+                .iter()
+                .map(|r| r.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    for f in &findings {
+        eprintln!("error: {f}");
+        eprintln!("       fix: {}", f.rule.hint());
+    }
+    eprintln!(
+        "neukonfig_lint: {} violation{} — these invariants are hard errors \
+         (waive a line with `neukonfig_lint: allow(<rule>) — reason`)",
+        findings.len(),
+        if findings.len() == 1 { "" } else { "s" },
+    );
+    ExitCode::FAILURE
+}

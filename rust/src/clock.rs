@@ -101,6 +101,33 @@ pub fn timed<T>(c: &Clock, f: impl FnOnce() -> T) -> (T, Duration) {
     (out, c.now() - t0)
 }
 
+/// Monotonic stopwatch over the host clock — the sanctioned entry point for
+/// timing *real measured work* (PJRT compilation, chain execution, codec
+/// encode/decode, bench iterations), complementing [`Clock`], which owns the
+/// experiment timeline.
+///
+/// Everything outside this module goes through `Stopwatch` or [`Clock`]
+/// rather than calling `Instant::now()` directly: the fault/bandwidth
+/// schedules and every downtime equation consume the virtual timeline, so a
+/// stray wall-clock read is a determinism hazard the `neukonfig_lint`
+/// `wall_clock` rule rejects.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Wall time elapsed since [`Self::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +171,16 @@ mod tests {
         let c = Clock::simulated();
         let (_, d) = timed(&c, || c.sleep(Duration::from_secs(2)));
         assert!(d >= Duration::from_secs(2));
+    }
+
+    #[test]
+    fn stopwatch_measures_wall_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let d = sw.elapsed();
+        assert!(d >= Duration::from_millis(5));
+        // Monotone: a later read never goes backwards.
+        assert!(sw.elapsed() >= d);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 
 use crate::clock::Clock;
 use crate::config::ContainerCosts;
+use crate::util::sync::lock_clean;
 
 /// Simulated memory accounting for one host (MB granularity).
 #[derive(Debug)]
@@ -48,7 +49,7 @@ impl std::fmt::Debug for Reservation {
 
 impl Drop for Reservation {
     fn drop(&mut self) {
-        let mut s = self.ledger.state.lock().unwrap();
+        let mut s = lock_clean(&self.ledger.state);
         s.in_use_mb -= self.mb;
         s.entries.retain(|(id, _, _)| *id != self.id);
     }
@@ -63,7 +64,7 @@ impl MemoryLedger {
     /// this is what produces the paper's "no results at <=10% memory
     /// availability" gap (Fig 11).
     pub fn reserve(self: &Arc<Self>, label: &str, mb: f64) -> Result<Reservation> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         if s.in_use_mb + mb > self.total_mb + 1e-9 {
             bail!(
                 "OOM on ledger: {label} needs {mb:.1} MB, {:.1}/{:.1} MB in use",
@@ -80,11 +81,11 @@ impl MemoryLedger {
     }
 
     pub fn in_use_mb(&self) -> f64 {
-        self.state.lock().unwrap().in_use_mb
+        lock_clean(&self.state).in_use_mb
     }
 
     pub fn peak_mb(&self) -> f64 {
-        self.state.lock().unwrap().peak_mb
+        lock_clean(&self.state).peak_mb
     }
 
     pub fn total_mb(&self) -> f64 {
@@ -97,9 +98,7 @@ impl MemoryLedger {
 
     /// Labelled breakdown (Table I rows).
     pub fn entries(&self) -> Vec<(String, f64)> {
-        self.state
-            .lock()
-            .unwrap()
+        lock_clean(&self.state)
             .entries
             .iter()
             .map(|(_, l, m)| (l.clone(), *m))
@@ -107,7 +106,7 @@ impl MemoryLedger {
     }
 
     pub fn reset_peak(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         s.peak_mb = s.in_use_mb;
     }
 }
@@ -129,7 +128,7 @@ pub struct Container {
 
 impl Container {
     pub fn state(&self) -> ContainerState {
-        *self.state.lock().unwrap()
+        *lock_clean(&self.state)
     }
 
     /// Ledger-attributed footprint of this container (its reservation).
@@ -173,11 +172,11 @@ impl ContainerHost {
         image: &str,
         app_mb: f64,
     ) -> Result<Arc<Container>> {
-        let warm = self.image_cache.lock().unwrap().contains(image);
+        let warm = lock_clean(&self.image_cache).contains(image);
         if !warm {
             // Cold image: pay the full start cost once, then cache.
             self.clock.sleep(self.costs.container_start);
-            self.image_cache.lock().unwrap().insert(image.to_string());
+            lock_clean(&self.image_cache).insert(image.to_string());
         } else {
             self.clock.sleep(self.costs.container_start);
         }
@@ -192,22 +191,22 @@ impl ContainerHost {
 
     /// Pre-warm the image cache (paper: base image stored in local cache).
     pub fn warm_image(&self, image: &str) {
-        self.image_cache.lock().unwrap().insert(image.to_string());
+        lock_clean(&self.image_cache).insert(image.to_string());
     }
 
     pub fn pause(&self, c: &Container) {
         self.clock.sleep(self.costs.pause);
-        *c.state.lock().unwrap() = ContainerState::Paused;
+        *lock_clean(&c.state) = ContainerState::Paused;
     }
 
     pub fn unpause(&self, c: &Container) {
         self.clock.sleep(self.costs.unpause);
-        *c.state.lock().unwrap() = ContainerState::Running;
+        *lock_clean(&c.state) = ContainerState::Running;
     }
 
     pub fn stop(&self, c: &Container) {
         self.clock.sleep(self.costs.container_stop);
-        *c.state.lock().unwrap() = ContainerState::Stopped;
+        *lock_clean(&c.state) = ContainerState::Stopped;
     }
 
     pub fn costs(&self) -> &ContainerCosts {

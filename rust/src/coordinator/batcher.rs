@@ -11,6 +11,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 use crate::device::Frame;
+use crate::util::sync::{lock_clean, wait_timeout_while_clean};
 
 /// Result of offering a frame to the batcher.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +41,7 @@ impl Batcher {
 
     /// Non-blocking enqueue; full queue rejects (frame drop).
     pub fn offer(&self, frame: Frame) -> Offer {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_clean(&self.inner);
         if q.len() >= self.capacity {
             return Offer::Rejected;
         }
@@ -51,7 +52,7 @@ impl Batcher {
 
     /// Drain up to `drain_max` queued frames (non-blocking).
     pub fn drain(&self) -> Vec<Frame> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_clean(&self.inner);
         let n = q.len().min(self.drain_max);
         q.drain(..n).collect()
     }
@@ -59,17 +60,15 @@ impl Batcher {
     /// Blocking drain: waits until at least one frame is available or the
     /// timeout elapses. Returns an empty vec on timeout.
     pub fn drain_wait(&self, timeout: std::time::Duration) -> Vec<Frame> {
-        let q = self.inner.lock().unwrap();
-        let (mut q, _t) = self
-            .notify
-            .wait_timeout_while(q, timeout, |q| q.is_empty())
-            .unwrap();
+        let q = lock_clean(&self.inner);
+        let (mut q, _t) =
+            wait_timeout_while_clean(&self.notify, q, timeout, |q| q.is_empty());
         let n = q.len().min(self.drain_max);
         q.drain(..n).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_clean(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {

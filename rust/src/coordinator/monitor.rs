@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::netsim::{Link, Schedule};
+use crate::util::sync::lock_clean;
 
 /// A detected change in network speed.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,11 +42,11 @@ impl NetworkMonitor {
     /// Advance the trace to `now` (applying due bandwidth events to the
     /// link) and report a change if it crosses the threshold.
     pub fn poll(&self, now: Duration) -> Option<BandwidthChange> {
-        if let Some(new_bw) = self.schedule.lock().unwrap().poll(now) {
+        if let Some(new_bw) = lock_clean(&self.schedule).poll(now) {
             self.link.set_bandwidth(new_bw);
         }
         let current = self.link.bandwidth_mbps();
-        let mut last = self.last_mbps.lock().unwrap();
+        let mut last = lock_clean(&self.last_mbps);
         let rel = (current - *last).abs() / last.max(1e-9);
         if rel > self.threshold {
             let change = BandwidthChange { at: now, from_mbps: *last, to_mbps: current };
@@ -64,11 +65,11 @@ impl NetworkMonitor {
     }
 
     pub fn next_event(&self) -> Option<(Duration, f64)> {
-        self.schedule.lock().unwrap().peek_next()
+        lock_clean(&self.schedule).peek_next()
     }
 
     pub fn trace_done(&self) -> bool {
-        self.schedule.lock().unwrap().is_done()
+        lock_clean(&self.schedule).is_done()
     }
 }
 
@@ -114,7 +115,7 @@ impl TriggerPolicy {
         now: Duration,
         observed: Option<BandwidthChange>,
     ) -> Option<BandwidthChange> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         if let Some(change) = observed {
             // A new (different-target) change restarts confirmation.
             match s.pending {

@@ -3,12 +3,12 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
-use crate::clock::Clock;
+use crate::clock::{Clock, Stopwatch};
 use crate::codec::{self, TransferCodec};
 use crate::container::{Container, ContainerHost};
 use crate::metrics::{CodecStats, FaultStats};
@@ -17,6 +17,7 @@ use crate::netsim::{FaultPlan, Link, RetryPolicy, TransferAborted};
 use crate::runtime::{
     literal_from_f32, BuildOptions, ChainExecutor, Domain, WeightStore,
 };
+use crate::util::sync::lock_clean;
 
 use super::state::PipelineState;
 
@@ -158,12 +159,12 @@ pub struct Pipeline {
 
 impl Pipeline {
     pub fn state(&self) -> PipelineState {
-        *self.state.lock().unwrap()
+        *lock_clean(&self.state)
     }
 
     /// Validated state transition.
     pub fn transition(&self, to: PipelineState) -> Result<()> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_clean(&self.state);
         if !s.can_transition(to) {
             bail!("pipeline {}: illegal transition {} -> {}", self.id, *s, to);
         }
@@ -319,12 +320,12 @@ impl Pipeline {
                 .record(rep.raw_bytes, rep.wire_bytes, rep.t_encode, rep.t_decode);
             return Ok((intermediate, rep));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let enc = codec::encode_literal(self.codec, &intermediate)?;
         let t_encode = t0.elapsed();
         let wire_bytes = enc.wire_bytes();
         let (t_transfer, t_backoff, attempts) = self.transfer_with_retry(wire_bytes)?;
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let decoded = codec::decode_literal(&enc)?;
         let t_decode = t1.elapsed();
         let rep = TransferReport {
@@ -645,7 +646,7 @@ impl EdgeCloudEnv {
             for _ in 0..workers {
                 s.spawn(|| loop {
                     let k = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if k >= jobs.len() || failure.lock().unwrap().is_some() {
+                    if k >= jobs.len() || lock_clean(&failure).is_some() {
                         break;
                     }
                     let (d, i) = jobs[k];
@@ -660,7 +661,7 @@ impl EdgeCloudEnv {
                         Ok(())
                     };
                     if let Err(e) = warm_one() {
-                        failure.lock().unwrap().get_or_insert(e);
+                        lock_clean(&failure).get_or_insert(e);
                         break;
                     }
                 });

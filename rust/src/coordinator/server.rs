@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::device::FrameSource;
 use crate::metrics::DowntimeRecord;
+use crate::util::sync::lock_clean;
 
 use super::batcher::{Batcher, Offer};
 use super::monitor::{NetworkMonitor, TriggerPolicy};
@@ -176,6 +177,10 @@ pub fn serve(
                     }
                     let now = clock.now() - started;
                     if due > now {
+                        // Real pacing wait even when the clock is simulated:
+                        // a simulated sleep would advance the timeline and
+                        // stampede every pending frame due at once.
+                        // neukonfig_lint: allow(raw_sleep) — camera pacing is wall-time by design
                         std::thread::sleep((due - now).min(Duration::from_millis(200)));
                     }
                 }
@@ -196,7 +201,7 @@ pub fn serve(
                     in_downtime.store(true, Ordering::Release);
                     let rec = strategy.repartition(plan.split)?;
                     in_downtime.store(false, Ordering::Release);
-                    let mut r = report.lock().unwrap();
+                    let mut r = lock_clean(&report);
                     r.downtimes.push(rec);
                     r.repartitions.push((change.to_mbps, plan.split));
                 }

@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 use xla::Literal;
 
 use crate::metrics::DowntimeRecord;
+use crate::util::sync::lock_clean;
 
 use super::pipeline::{EdgeCloudEnv, Pipeline, Placement};
 use super::router::Router;
@@ -72,7 +73,7 @@ impl ScenarioA {
     }
 
     pub fn standby_split(&self) -> Option<usize> {
-        self.standby.lock().unwrap().as_ref().map(|p| p.split)
+        lock_clean(&self.standby).as_ref().map(|p| p.split)
     }
 
     /// Switch traffic to the standby pipeline. Downtime = t_switch
@@ -85,10 +86,7 @@ impl ScenarioA {
         let mut rec = DowntimeRecord::default();
 
         self.router.set_downtime(true);
-        let standby = self
-            .standby
-            .lock()
-            .unwrap()
+        let standby = lock_clean(&self.standby)
             .take()
             .context("no standby pipeline available")?;
         let (old, t_switch) = self.router.switch(standby)?;
@@ -101,7 +99,7 @@ impl ScenarioA {
         // Outside the downtime window: recycle the displaced pipeline as
         // the new standby.
         old.transition(PipelineState::Standby)?;
-        *self.standby.lock().unwrap() = Some(old);
+        *lock_clean(&self.standby) = Some(old);
         Ok(rec)
     }
 
@@ -118,10 +116,7 @@ impl ScenarioA {
         let mut rec = DowntimeRecord::default();
 
         self.router.set_downtime(true);
-        let standby = self
-            .standby
-            .lock()
-            .unwrap()
+        let standby = lock_clean(&self.standby)
             .take()
             .context("no standby pipeline available")?;
         match self.router.switch_probed(standby.clone(), probe) {
@@ -131,7 +126,7 @@ impl ScenarioA {
                 rec.total = clock.now() - t0;
                 rec.simulated = clock.simulated_component() - sim0;
                 old.transition(PipelineState::Standby)?;
-                *self.standby.lock().unwrap() = Some(old);
+                *lock_clean(&self.standby) = Some(old);
             }
             Err(_) => {
                 // Rollback: the router never swapped (switch_probed counted
@@ -141,7 +136,7 @@ impl ScenarioA {
                 rec.push_phase("aborted-switch", clock.now() - t0);
                 rec.total = clock.now() - t0;
                 rec.simulated = clock.simulated_component() - sim0;
-                *self.standby.lock().unwrap() = Some(standby);
+                *lock_clean(&self.standby) = Some(standby);
             }
         }
         Ok(rec)
@@ -157,7 +152,7 @@ impl ScenarioA {
         }
         let clock = &self.env.clock;
         let t0 = clock.now();
-        let old = self.standby.lock().unwrap().take();
+        let old = lock_clean(&self.standby).take();
         if let Some(p) = old {
             p.transition(PipelineState::Terminated)?;
             if self.case == PlacementCase::NewContainer {
@@ -175,7 +170,7 @@ impl ScenarioA {
         };
         let standby = Arc::new(self.env.build_pipeline(split, placement)?);
         standby.transition(PipelineState::Standby)?;
-        *self.standby.lock().unwrap() = Some(standby);
+        *lock_clean(&self.standby) = Some(standby);
         Ok(clock.now() - t0)
     }
 }

@@ -26,6 +26,7 @@ pub mod config;
 pub mod container;
 pub mod coordinator;
 pub mod device;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod netsim;

@@ -1,0 +1,722 @@
+//! `neukonfig_lint` — repo-specific static analysis for the concurrency
+//! and determinism invariants the NEUKONFIG reproduction depends on.
+//!
+//! The headline result (sub-millisecond Dynamic Switching downtime) rests
+//! on concurrent hand-offs being correct *and* on experiment timelines
+//! being deterministic. Five invariants are load-bearing enough to enforce
+//! as hard errors over `rust/src` (DESIGN.md §Concurrency invariants):
+//!
+//! 1. **`bare_lock`** — no `.lock().unwrap()` / `.read().unwrap()` /
+//!    `.write().unwrap()` (or `.expect(...)`) outside `util/sync.rs`. A
+//!    panicking stage thread poisons its mutexes; bare unwraps cascade
+//!    that panic into the router/monitor. Use the poison-recovering
+//!    helpers `lock_clean` / `read_clean` / `write_clean`.
+//! 2. **`wall_clock`** — no `Instant::now()` / `SystemTime::now()`
+//!    outside `clock.rs`. All timing flows through the virtual [`Clock`]
+//!    or its [`Stopwatch`], so fault/bandwidth schedules replay
+//!    deterministically and Eq. 1–5 decompositions stay attributable.
+//! 3. **`unsafe_code`** — no `unsafe` outside an explicit allowlist, and
+//!    even allowlisted blocks must carry a `// SAFETY:` comment within the
+//!    three preceding lines.
+//! 4. **`unbounded_channel`** — no unbounded `mpsc::channel()` in
+//!    coordinator code; the runner's backpressure (flat edge memory)
+//!    depends on bounded `sync_channel` depths.
+//! 5. **`raw_sleep`** — no `std::thread::sleep` outside `clock.rs`;
+//!    waiting goes through `Clock::sleep` (so simulated timelines advance
+//!    instead of blocking) or the transfer `RetryPolicy`.
+//!
+//! A violation can be waived line-by-line with an explicit marker in a
+//! comment on the same line or the line above:
+//! `neukonfig_lint: allow(<rule>) — <reason>`. Code under a
+//! `#[cfg(test)]` item is skipped (tests legitimately sleep and unwrap).
+//!
+//! The implementation is deliberately `syn`-free — the offline build
+//! environment has no proc-macro crates — so this is a comment/string/
+//! char-literal-aware token scrubber plus whitespace-insensitive pattern
+//! matching over the scrubbed stream. That is exact enough for these five
+//! rules, all of which are token-sequence properties.
+//!
+//! [`Clock`]: crate::clock::Clock
+//! [`Stopwatch`]: crate::clock::Stopwatch
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The enforced invariants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    BareLock,
+    WallClock,
+    UnsafeCode,
+    UnboundedChannel,
+    RawSleep,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::BareLock,
+        Rule::WallClock,
+        Rule::UnsafeCode,
+        Rule::UnboundedChannel,
+        Rule::RawSleep,
+    ];
+
+    /// Marker name used in `neukonfig_lint: allow(<name>)`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::BareLock => "bare_lock",
+            Rule::WallClock => "wall_clock",
+            Rule::UnsafeCode => "unsafe_code",
+            Rule::UnboundedChannel => "unbounded_channel",
+            Rule::RawSleep => "raw_sleep",
+        }
+    }
+
+    /// One-line fix hint shown with each finding.
+    pub fn hint(self) -> &'static str {
+        match self {
+            Rule::BareLock => {
+                "use util::sync::{lock_clean, read_clean, write_clean} — bare unwraps \
+                 cascade a stage panic through every thread that touches the lock"
+            }
+            Rule::WallClock => {
+                "route timing through clock::Clock or clock::Stopwatch — stray wall-clock \
+                 reads break fault/bandwidth timeline determinism (Eq. 1–5)"
+            }
+            Rule::UnsafeCode => {
+                "remove the unsafe block, or allowlist the file AND justify it with a \
+                 `// SAFETY:` comment within the 3 preceding lines"
+            }
+            Rule::UnboundedChannel => {
+                "use std::sync::mpsc::sync_channel(depth) — runner backpressure (flat \
+                 edge memory) depends on bounded hand-off depths"
+            }
+            Rule::RawSleep => {
+                "wait via Clock::sleep (simulated timelines advance instead of blocking) \
+                 or the transfer RetryPolicy"
+            }
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: PathBuf,
+    /// 1-based line of the match start.
+    pub line: usize,
+    pub rule: Rule,
+    /// The offending raw source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file.display(),
+            self.line,
+            self.rule,
+            self.snippet
+        )
+    }
+}
+
+/// Lint configuration — the committed policy lives in [`LintConfig::default`].
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Path suffixes (with `/` separators) where `unsafe` is permitted
+    /// when accompanied by a `// SAFETY:` comment. Empty by default: the
+    /// one historical unsafe block (`runtime::literal_from_f32`'s
+    /// `from_raw_parts` cast) was replaced with a safe byte copy.
+    pub unsafe_allowlist: Vec<String>,
+    /// Path suffixes exempt from `bare_lock` (the helpers themselves).
+    pub bare_lock_exempt: Vec<String>,
+    /// Path suffixes exempt from `wall_clock` and `raw_sleep` (the clock
+    /// module is the wall-clock authority).
+    pub clock_exempt: Vec<String>,
+    /// `unbounded_channel` applies only to files whose path contains one
+    /// of these components (coordinator hand-off code).
+    pub channel_scope: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            unsafe_allowlist: vec![],
+            bare_lock_exempt: vec!["util/sync.rs".into()],
+            clock_exempt: vec!["clock.rs".into()],
+            channel_scope: vec!["coordinator/".into()],
+        }
+    }
+}
+
+fn norm(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+/// Suffix match on whole path components: `clock.rs` matches `clock.rs`
+/// and `rust/src/clock.rs` but NOT `wall_clock.rs`.
+fn suffix_match(path: &str, suffixes: &[String]) -> bool {
+    suffixes.iter().any(|s| {
+        path.ends_with(s.as_str()) && {
+            let head = &path[..path.len() - s.len()];
+            head.is_empty() || head.ends_with('/')
+        }
+    })
+}
+
+fn component_match(path: &str, parts: &[String]) -> bool {
+    parts.iter().any(|p| path.contains(p.as_str()))
+}
+
+/// Strip comments, string/char literals from `src`, preserving line
+/// structure (every removed char that is not a newline becomes a space).
+/// Rust block comments nest; raw strings (`r#"..."#`, any hash depth, with
+/// optional `b` prefix) are handled; `'a` lifetimes are distinguished from
+/// char literals.
+pub fn scrub(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let n = b.len();
+    // Push `c` or its blank placeholder, preserving newlines.
+    let blank = |out: &mut String, c: char| {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    };
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nesting).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string (r"...", r#"..."#, br"...").
+        let raw_start = (c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r'))
+            && (i == 0 || !is_ident(b[i.saturating_sub(1)]));
+        if raw_start {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                // Blank the prefix + opening quote.
+                while i <= j {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                // Scan for `"` followed by `hashes` hashes.
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                blank(&mut out, b[i]);
+                                i += 1;
+                            }
+                            break 'raw;
+                        }
+                    }
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Not a raw string after all — fall through as a plain char.
+        }
+        // Plain string literal.
+        if c == '"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = b[i] == '"';
+                blank(&mut out, b[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: a char literal closes within a few
+        // chars (`'x'`, `'\n'`, `'\u{1F600}'`); a lifetime never closes.
+        if c == '\'' {
+            let mut j = i + 1;
+            if j < n && b[j] == '\\' {
+                j += 2;
+                while j < n && b[j] != '\'' && b[j] != '\n' {
+                    j += 1;
+                }
+            } else if j < n {
+                j += 1;
+            }
+            if j < n && b[j] == '\'' && j > i + 1 {
+                while i <= j {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime (or stray quote): keep scanning normally.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// The scrubbed file compacted to a whitespace-free stream, with a map
+/// from compact index back to the 1-based source line.
+struct Compact {
+    text: String,
+    line_of: Vec<usize>,
+}
+
+fn compact(scrubbed: &str) -> Compact {
+    let mut text = String::with_capacity(scrubbed.len());
+    let mut line_of = Vec::with_capacity(scrubbed.len());
+    let mut line = 1usize;
+    for c in scrubbed.chars() {
+        if c == '\n' {
+            line += 1;
+        } else if !c.is_whitespace() {
+            text.push(c);
+            line_of.push(line);
+        }
+    }
+    Compact { text, line_of }
+}
+
+/// 1-based line ranges covered by `#[cfg(test)]` items (attribute through
+/// the matching close brace of the following item), found by brace-matching
+/// in the compact stream and mapped back to source lines so matches from
+/// either text form can consult them.
+fn test_line_regions(c: &Compact) -> Vec<(usize, usize)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut regions = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = c.text[from..].find(ATTR) {
+        let start = from + pos;
+        let mut i = start + ATTR.len();
+        let bytes = c.text.as_bytes();
+        // Find the item's opening brace, then brace-match to its close.
+        while i < bytes.len() && bytes[i] != b'{' {
+            i += 1;
+        }
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        let start_line = c.line_of.get(start).copied().unwrap_or(1);
+        // An unterminated item (EOF before the close brace) covers the
+        // rest of the file.
+        let end_line = c.line_of.get(i).copied().unwrap_or(usize::MAX);
+        regions.push((start_line, end_line));
+        from = i.min(bytes.len()).max(start + ATTR.len());
+    }
+    regions
+}
+
+fn in_regions(line: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Does `raw_lines[line-1]` or the line above carry the allow marker for
+/// `rule`?
+fn allowed(raw_lines: &[&str], line: usize, rule: Rule) -> bool {
+    let marker = format!("neukonfig_lint: allow({})", rule.name());
+    let lo = line.saturating_sub(2); // 0-based index of the line above
+    raw_lines
+        .iter()
+        .skip(lo)
+        .take(if line >= 2 { 2 } else { 1 })
+        .any(|l| l.contains(&marker))
+}
+
+/// Is there a `// SAFETY:` comment on `line` or the 3 lines above it?
+fn safety_commented(raw_lines: &[&str], line: usize) -> bool {
+    let lo = line.saturating_sub(4);
+    raw_lines
+        .iter()
+        .skip(lo)
+        .take(line - lo)
+        .any(|l| l.contains("SAFETY:"))
+}
+
+/// All positions in `text` where `pat` occurs.
+fn find_all(text: &str, pat: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(pat) {
+        hits.push(from + pos);
+        from = from + pos + 1;
+    }
+    hits
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lint one file's source text.
+pub fn lint_source(path: &Path, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let p = norm(path);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let scrubbed = scrub(src);
+    let c = compact(&scrubbed);
+    let tests = test_line_regions(&c);
+    let mut findings = Vec::new();
+
+    let mut push = |rule: Rule, line: usize, findings: &mut Vec<Finding>| {
+        if in_regions(line, &tests) {
+            return;
+        }
+        if allowed(&raw_lines, line, rule) {
+            return;
+        }
+        if rule == Rule::UnsafeCode
+            && suffix_match(&p, &cfg.unsafe_allowlist)
+            && safety_commented(&raw_lines, line)
+        {
+            return;
+        }
+        findings.push(Finding {
+            file: path.to_path_buf(),
+            line,
+            rule,
+            snippet: raw_lines
+                .get(line - 1)
+                .map(|l| l.trim().to_string())
+                .unwrap_or_default(),
+        });
+    };
+
+    // The compact (whitespace-free) stream catches call chains split
+    // across lines; a compact position maps back to a source line.
+    let line_at = |pos: usize| c.line_of.get(pos).copied().unwrap_or(1);
+
+    // 1. bare_lock — poison-unsafe guard acquisition. Leading `.` in the
+    //    patterns keeps `try_lock().unwrap()` out of scope.
+    if !suffix_match(&p, &cfg.bare_lock_exempt) {
+        for pat in [
+            ".lock().unwrap()",
+            ".lock().expect(",
+            ".read().unwrap()",
+            ".read().expect(",
+            ".write().unwrap()",
+            ".write().expect(",
+        ] {
+            for pos in find_all(&c.text, pat) {
+                push(Rule::BareLock, line_at(pos), &mut findings);
+            }
+        }
+    }
+
+    // 2. wall_clock — stray monotonic/wall reads.
+    if !suffix_match(&p, &cfg.clock_exempt) {
+        for pat in ["Instant::now()", "SystemTime::now()"] {
+            for pos in find_all(&c.text, pat) {
+                push(Rule::WallClock, line_at(pos), &mut findings);
+            }
+        }
+    }
+
+    // 3. unsafe_code — keyword with word boundaries. Matched on the
+    //    scrubbed (not compact) text: compaction would glue `unsafe fn`
+    //    into `unsafefn` and defeat the boundary check.
+    for pos in find_all(&scrubbed, "unsafe") {
+        let before = scrubbed[..pos].chars().next_back();
+        let after = scrubbed[pos + "unsafe".len()..].chars().next();
+        if before.is_some_and(is_ident_char) || after.is_some_and(is_ident_char) {
+            continue;
+        }
+        let line = 1 + scrubbed[..pos].matches('\n').count();
+        push(Rule::UnsafeCode, line, &mut findings);
+    }
+
+    // 4. unbounded_channel — coordinator scope only.
+    if component_match(&p, &cfg.channel_scope) {
+        for pat in ["channel()", "channel::<"] {
+            for pos in find_all(&c.text, pat) {
+                // `sync_channel()` / `sync_channel::<` share the suffix;
+                // reject matches whose preceding char extends the ident.
+                if c.text[..pos].chars().next_back().is_some_and(is_ident_char) {
+                    continue;
+                }
+                push(Rule::UnboundedChannel, line_at(pos), &mut findings);
+            }
+        }
+    }
+
+    // 5. raw_sleep — blocking waits outside the clock.
+    if !suffix_match(&p, &cfg.clock_exempt) {
+        for pos in find_all(&c.text, "thread::sleep(") {
+            push(Rule::RawSleep, line_at(pos), &mut findings);
+        }
+    }
+
+    findings.sort_by_key(|f| (f.line, f.rule.name()));
+    findings
+}
+
+/// Lint every `.rs` file under `root` (a file path lints that one file).
+pub fn lint_tree(root: &Path, cfg: &LintConfig) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        findings.extend(lint_source(&f, &src, cfg));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path)? {
+        collect_rs(&entry?.path(), out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(name: &str, src: &str) -> Vec<Finding> {
+        lint_source(Path::new(name), src, &LintConfig::default())
+    }
+
+    fn rules(f: &[Finding]) -> Vec<Rule> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn scrub_strips_comments_and_strings() {
+        let src = "let a = \"lock().unwrap()\"; // Instant::now()\n/* unsafe */ let b = 1;";
+        let s = scrub(src);
+        assert!(!s.contains("unwrap"));
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("unsafe"));
+        assert!(s.contains("let a ="));
+        assert!(s.contains("let b = 1;"));
+        assert_eq!(s.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn scrub_handles_nested_and_raw() {
+        let src = "/* a /* nested unsafe */ still comment */ x\nlet r = r#\"thread::sleep(\"#;";
+        let s = scrub(src);
+        assert!(!s.contains("unsafe"));
+        assert!(!s.contains("sleep"));
+        assert!(s.contains('x'));
+        assert!(s.contains("let r ="));
+    }
+
+    #[test]
+    fn scrub_distinguishes_lifetimes_from_chars() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }";
+        let s = scrub(src);
+        assert!(s.contains("fn f<'a>(x: &'a str)"));
+        assert!(!s.contains("'x'"));
+    }
+
+    #[test]
+    fn bare_lock_matches_across_lines() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m\n        .lock()\n        .unwrap()\n}\n";
+        let f = lint_str("a.rs", src);
+        assert_eq!(rules(&f), vec![Rule::BareLock]);
+        assert_eq!(f[0].line, 3, "finding anchors at the .lock() line");
+    }
+
+    #[test]
+    fn lock_expect_and_rwlock_variants_trip() {
+        let src = "fn f() { m.lock().expect(\"x\"); l.read().unwrap(); l.write().unwrap(); }";
+        assert_eq!(
+            rules(&lint_str("a.rs", src)),
+            vec![Rule::BareLock, Rule::BareLock, Rule::BareLock]
+        );
+    }
+
+    #[test]
+    fn try_lock_is_not_bare_lock() {
+        let src = "fn f() { let _ = m.try_lock().unwrap(); }";
+        assert!(lint_str("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sync_helpers_file_is_exempt() {
+        let src = "pub fn lock_clean() { m.lock().unwrap(); }";
+        assert!(lint_str("rust/src/util/sync.rs", src).is_empty());
+        assert_eq!(rules(&lint_str("rust/src/other.rs", src)), vec![Rule::BareLock]);
+    }
+
+    #[test]
+    fn wall_clock_outside_clock_rs_trips() {
+        let src = "fn f() { let t = Instant::now(); let s = SystemTime::now(); }";
+        assert_eq!(
+            rules(&lint_str("rust/src/bench.rs", src)),
+            vec![Rule::WallClock, Rule::WallClock]
+        );
+        assert!(lint_str("rust/src/clock.rs", src).is_empty());
+        assert!(lint_str("clock.rs", src).is_empty());
+        // The exemption is per path component: a *_clock.rs file that
+        // merely shares the suffix is NOT the clock module.
+        assert_eq!(
+            rules(&lint_str("rust/src/wall_clock.rs", src)),
+            vec![Rule::WallClock, Rule::WallClock]
+        );
+    }
+
+    #[test]
+    fn allow_marker_waives_same_or_previous_line() {
+        let same = "let t = Instant::now(); // neukonfig_lint: allow(wall_clock) — pacing\n";
+        assert!(lint_str("a.rs", same).is_empty());
+        let above =
+            "// neukonfig_lint: allow(wall_clock) — pacing\nlet t = Instant::now();\n";
+        assert!(lint_str("a.rs", above).is_empty());
+        let wrong_rule =
+            "// neukonfig_lint: allow(raw_sleep)\nlet t = Instant::now();\n";
+        assert_eq!(rules(&lint_str("a.rs", wrong_rule)), vec![Rule::WallClock]);
+        let too_far =
+            "// neukonfig_lint: allow(wall_clock)\n\nlet t = Instant::now();\n";
+        assert_eq!(rules(&lint_str("a.rs", too_far)), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn unsafe_requires_allowlist_and_safety_comment() {
+        let bare = "fn f() { unsafe { g(); } }";
+        assert_eq!(rules(&lint_str("a.rs", bare)), vec![Rule::UnsafeCode]);
+
+        let commented = "// SAFETY: justified\nfn f() { unsafe { g(); } }";
+        // SAFETY comment alone is not enough — the file must be allowlisted.
+        assert_eq!(rules(&lint_str("a.rs", commented)), vec![Rule::UnsafeCode]);
+
+        let cfg = LintConfig {
+            unsafe_allowlist: vec!["a.rs".into()],
+            ..LintConfig::default()
+        };
+        assert!(lint_source(Path::new("a.rs"), commented, &cfg).is_empty());
+        // Allowlisted but uncommented still trips.
+        assert_eq!(
+            rules(&lint_source(Path::new("a.rs"), bare, &cfg)),
+            vec![Rule::UnsafeCode]
+        );
+    }
+
+    #[test]
+    fn unsafe_is_word_bounded() {
+        let src = "fn f() { let unsafety = 1; let x = not_unsafe; }";
+        assert!(lint_str("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unbounded_channel_only_in_coordinator_scope() {
+        let src = "fn f() { let (tx, rx) = mpsc::channel(); }";
+        assert_eq!(
+            rules(&lint_str("rust/src/coordinator/runner.rs", src)),
+            vec![Rule::UnboundedChannel]
+        );
+        assert!(lint_str("rust/src/util/model.rs", src).is_empty());
+        let turbofish = "fn f() { let (tx, rx) = channel::<u32>(); }";
+        assert_eq!(
+            rules(&lint_str("rust/src/coordinator/x.rs", turbofish)),
+            vec![Rule::UnboundedChannel]
+        );
+    }
+
+    #[test]
+    fn bounded_sync_channel_is_fine() {
+        let src = "fn f() { let (tx, rx) = sync_channel::<u32>(2); let c = sync_channel(1); }";
+        assert!(lint_str("rust/src/coordinator/runner.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_sleep_trips_outside_clock() {
+        let src = "fn f() { std::thread::sleep(d); }";
+        assert_eq!(rules(&lint_str("rust/src/coordinator/server.rs", src)), vec![Rule::RawSleep]);
+        assert!(lint_str("rust/src/clock.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { m.lock().unwrap(); std::thread::sleep(d); }\n}\n";
+        assert!(lint_str("a.rs", src).is_empty());
+        // ... but production code before/after still lints.
+        let mixed = "fn prod() { m.lock().unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { std::thread::sleep(d); } }\n";
+        assert_eq!(rules(&lint_str("a.rs", mixed)), vec![Rule::BareLock]);
+    }
+
+    #[test]
+    fn findings_render_with_location() {
+        let f = lint_str("src/x.rs", "fn f() { m.lock().unwrap(); }");
+        let shown = f[0].to_string();
+        assert!(shown.contains("src/x.rs:1"), "got {shown}");
+        assert!(shown.contains("bare_lock"), "got {shown}");
+    }
+}

@@ -5,6 +5,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::stats::Summary;
+use crate::util::sync::lock_clean;
 
 /// A measured service-downtime window, decomposed the way DESIGN.md
 //  §Substitutions promises: real work vs simulated Docker offsets.
@@ -86,15 +87,15 @@ impl FrameStats {
     }
 
     pub fn produced(&self) {
-        self.inner.lock().unwrap().produced += 1;
+        lock_clean(&self.inner).produced += 1;
     }
 
     pub fn processed(&self) {
-        self.inner.lock().unwrap().processed += 1;
+        lock_clean(&self.inner).processed += 1;
     }
 
     pub fn dropped(&self, during_downtime: bool) {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = lock_clean(&self.inner);
         s.dropped += 1;
         if during_downtime {
             s.dropped_during_downtime += 1;
@@ -102,7 +103,7 @@ impl FrameStats {
     }
 
     pub fn snapshot(&self) -> FrameStatsInner {
-        self.inner.lock().unwrap().clone()
+        lock_clean(&self.inner).clone()
     }
 }
 
@@ -141,7 +142,7 @@ impl CodecStats {
     }
 
     pub fn record(&self, raw_bytes: usize, wire_bytes: usize, encode: Duration, decode: Duration) {
-        let mut s = self.inner.lock().unwrap();
+        let mut s = lock_clean(&self.inner);
         s.frames += 1;
         s.raw_bytes += raw_bytes as u64;
         s.wire_bytes += wire_bytes as u64;
@@ -150,7 +151,7 @@ impl CodecStats {
     }
 
     pub fn snapshot(&self) -> CodecStatsInner {
-        self.inner.lock().unwrap().clone()
+        lock_clean(&self.inner).clone()
     }
 }
 
@@ -209,31 +210,31 @@ impl FaultStats {
     }
 
     pub fn record_retry(&self, backoff: Duration) {
-        let mut s = crate::util::sync::lock_clean(&self.inner);
+        let mut s = lock_clean(&self.inner);
         s.retries += 1;
         s.backoff_time += backoff;
     }
 
     pub fn record_dropped_frame(&self) {
-        crate::util::sync::lock_clean(&self.inner).dropped_frames += 1;
+        lock_clean(&self.inner).dropped_frames += 1;
     }
 
     pub fn record_degraded_window(&self, lasted: Duration) {
-        let mut s = crate::util::sync::lock_clean(&self.inner);
+        let mut s = lock_clean(&self.inner);
         s.degraded_windows += 1;
         s.degraded_time += lasted;
     }
 
     pub fn record_degraded_frame(&self) {
-        crate::util::sync::lock_clean(&self.inner).degraded_frames += 1;
+        lock_clean(&self.inner).degraded_frames += 1;
     }
 
     pub fn record_aborted_switch(&self) {
-        crate::util::sync::lock_clean(&self.inner).aborted_switches += 1;
+        lock_clean(&self.inner).aborted_switches += 1;
     }
 
     pub fn snapshot(&self) -> FaultStatsInner {
-        crate::util::sync::lock_clean(&self.inner).clone()
+        lock_clean(&self.inner).clone()
     }
 }
 
@@ -298,26 +299,26 @@ impl LatencyHistogram {
 
     pub fn record(&self, d: Duration) {
         let idx = Self::bucket_of(d);
-        self.buckets.lock().unwrap()[idx] += 1;
+        lock_clean(&self.buckets)[idx] += 1;
         if self.keep_samples {
-            self.samples.lock().unwrap().push(d.as_secs_f64());
+            lock_clean(&self.samples).push(d.as_secs_f64());
         }
     }
 
     pub fn count(&self) -> u64 {
-        self.buckets.lock().unwrap().iter().sum()
+        lock_clean(&self.buckets).iter().sum()
     }
 
     /// Exact summary when samples are kept, else None.
     pub fn summary(&self) -> Option<Summary> {
-        let s = self.samples.lock().unwrap();
+        let s = lock_clean(&self.samples);
         Summary::of(&s)
     }
 
     /// Approximate quantile from the histogram buckets (upper bound of the
     /// bucket containing the quantile).
     pub fn quantile_approx(&self, q: f64) -> Option<Duration> {
-        let buckets = self.buckets.lock().unwrap();
+        let buckets = lock_clean(&self.buckets);
         let total: u64 = buckets.iter().sum();
         if total == 0 {
             return None;

@@ -8,10 +8,11 @@
 //! used by pure-logic tests and fast sweeps).
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::clock::Stopwatch;
 use crate::codec::TransferCodec;
 use crate::models::ModelManifest;
 use crate::netsim::transfer_time;
@@ -281,10 +282,10 @@ pub fn measure(
         let mut edge_best = Duration::MAX;
         let mut cloud_best = Duration::MAX;
         for _ in 0..reps.max(1) {
-            let t0 = Instant::now();
+            let t0 = Stopwatch::start();
             e.run(&cur)?;
             edge_best = edge_best.min(t0.elapsed());
-            let t1 = Instant::now();
+            let t1 = Stopwatch::start();
             c.run(&cur)?;
             cloud_best = cloud_best.min(t1.elapsed());
         }

@@ -19,12 +19,13 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
-use crate::clock::Clock;
+use crate::clock::{Clock, Stopwatch};
+use crate::util::sync::lock_clean;
 use crate::models::{LayerManifest, ModelManifest};
 pub use weights::WeightStore;
 
@@ -273,7 +274,7 @@ impl Domain {
     /// Load + compile an HLO module, with optional caching.
     pub fn compile_hlo(&self, path: &Path, use_cache: bool) -> Result<Arc<PjRtLoadedExecutable>> {
         if use_cache {
-            if let Some(exe) = self.exe_cache.lock().unwrap().get(path) {
+            if let Some(exe) = lock_clean(&self.exe_cache).get(path) {
                 return Ok(exe.clone());
             }
         }
@@ -286,10 +287,7 @@ impl Domain {
                 .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?,
         );
         if use_cache {
-            self.exe_cache
-                .lock()
-                .unwrap()
-                .insert(path.to_path_buf(), exe.clone());
+            lock_clean(&self.exe_cache).insert(path.to_path_buf(), exe.clone());
         }
         Ok(exe)
     }
@@ -308,41 +306,41 @@ impl Domain {
     ) -> Result<(Arc<Vec<PjRtBuffer>>, bool)> {
         let key = (layer.index, layer.name.clone());
         if use_cache {
-            if let Some(bufs) = self.weight_cache.lock().unwrap().get(&key) {
+            if let Some(bufs) = lock_clean(&self.weight_cache).get(&key) {
                 return Ok((bufs, true));
             }
         }
         let bufs = Arc::new(weights.layer_buffers(&self.client, layer)?);
         if use_cache {
             let bytes = weights.layer_staged_bytes(layer)? as u64;
-            self.weight_cache.lock().unwrap().insert(key, bufs.clone(), bytes);
+            lock_clean(&self.weight_cache).insert(key, bufs.clone(), bytes);
         }
         Ok((bufs, false))
     }
 
     pub fn cache_len(&self) -> usize {
-        self.exe_cache.lock().unwrap().len()
+        lock_clean(&self.exe_cache).len()
     }
 
     pub fn weight_cache_len(&self) -> usize {
-        self.weight_cache.lock().unwrap().entries.len()
+        lock_clean(&self.weight_cache).entries.len()
     }
 
     /// Resident staged-weight bytes (always <= the budget when one is set).
     pub fn weight_cache_bytes(&self) -> u64 {
-        self.weight_cache.lock().unwrap().bytes
+        lock_clean(&self.weight_cache).bytes
     }
 
     /// Current byte budget (`None` = unbounded).
     pub fn weight_cache_budget_bytes(&self) -> Option<u64> {
-        self.weight_cache.lock().unwrap().budget_bytes
+        lock_clean(&self.weight_cache).budget_bytes
     }
 
     /// Set (or lift, with `None`) the weight-cache byte budget. Shrinking
     /// the budget evicts immediately — the memory knob takes effect without
     /// waiting for the next staging.
     pub fn set_weight_cache_budget_mb(&self, mb: Option<f64>) {
-        let mut cache = self.weight_cache.lock().unwrap();
+        let mut cache = lock_clean(&self.weight_cache);
         cache.budget_bytes = mb.filter(|m| *m > 0.0).map(mb_to_bytes);
         cache.enforce_budget();
     }
@@ -350,9 +348,7 @@ impl Domain {
     /// Peek whether a layer is resident, without touching LRU order or the
     /// hit/miss counters (test/observability hook).
     pub fn weight_cache_contains(&self, index: usize, name: &str) -> bool {
-        self.weight_cache
-            .lock()
-            .unwrap()
+        lock_clean(&self.weight_cache)
             .entries
             .contains_key(&(index, name.to_string()))
     }
@@ -360,11 +356,11 @@ impl Domain {
     /// Cache counters + occupancy since construction (or the last
     /// [`Self::reset_weight_cache_stats`]).
     pub fn weight_cache_stats(&self) -> WeightCacheStats {
-        self.weight_cache.lock().unwrap().stats()
+        lock_clean(&self.weight_cache).stats()
     }
 
     pub fn reset_weight_cache_stats(&self) {
-        let mut cache = self.weight_cache.lock().unwrap();
+        let mut cache = lock_clean(&self.weight_cache);
         cache.hits = 0;
         cache.misses = 0;
         cache.evictions = 0;
@@ -374,15 +370,27 @@ impl Domain {
     /// invalidation path that keeps the Pause-and-Resume ablation honest
     /// (the naive app tears its whole model down).
     pub fn clear_cache(&self) {
-        self.exe_cache.lock().unwrap().clear();
-        self.weight_cache.lock().unwrap().clear();
+        lock_clean(&self.exe_cache).clear();
+        lock_clean(&self.weight_cache).clear();
     }
 
     /// Drop only the staged weight buffers (zeroes occupancy; counters are
     /// left for [`Self::reset_weight_cache_stats`]).
     pub fn clear_weight_cache(&self) {
-        self.weight_cache.lock().unwrap().clear();
+        lock_clean(&self.weight_cache).clear();
     }
+}
+
+/// f32 slice to native-endian bytes — the safe replacement for the
+/// `from_raw_parts` cast this path used to carry. Pure (no FFI), so Miri
+/// can check it; the copy is vanishingly cheap next to the PJRT upload the
+/// bytes feed.
+pub fn f32s_to_ne_bytes(data: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_ne_bytes());
+    }
+    bytes
 }
 
 /// f32 literal from a host slice (frame upload helper).
@@ -391,10 +399,8 @@ pub fn literal_from_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
     if expected != data.len() {
         anyhow::bail!("literal shape {shape:?} needs {expected} floats, got {}", data.len());
     }
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+    let bytes = f32s_to_ne_bytes(data);
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)
         .map_err(|e| anyhow!("creating literal: {e:?}"))
 }
 
@@ -543,7 +549,7 @@ impl ChainExecutor {
             // (sticky — the domain keeps enforcing it afterwards).
             domain.set_weight_cache_budget_mb(Some(mb));
         }
-        let t_build = Instant::now();
+        let t_build = Stopwatch::start();
         let built = if opts.parallel && range.len() > 1 {
             Self::build_layers_parallel(&domain, manifest, range.clone(), weights, opts)?
         } else {
@@ -599,11 +605,11 @@ impl ChainExecutor {
         use_cache: bool,
     ) -> Result<BuiltLayer> {
         let lm = &manifest.layers[i];
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let exe = domain.compile_hlo(&manifest.hlo_path(i), use_cache)?;
         let compile = t0.elapsed();
 
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let (param_bufs, hit) = domain
             .layer_weight_buffers(weights, lm, use_cache)
             .with_context(|| format!("weights for {}", lm.name))?;
@@ -645,14 +651,14 @@ impl ChainExecutor {
             for _ in 0..workers {
                 s.spawn(|| loop {
                     let k = cursor.fetch_add(1, Ordering::Relaxed);
-                    if k >= n || failure.lock().unwrap().is_some() {
+                    if k >= n || lock_clean(&failure).is_some() {
                         break;
                     }
                     match Self::build_one(domain, manifest, indices[k], weights, opts.use_cache)
                     {
-                        Ok(built) => *slots[k].lock().unwrap() = Some(built),
+                        Ok(built) => *lock_clean(&slots[k]) = Some(built),
                         Err(e) => {
-                            failure.lock().unwrap().get_or_insert(e);
+                            lock_clean(&failure).get_or_insert(e);
                             break;
                         }
                     }
@@ -686,11 +692,11 @@ impl ChainExecutor {
     /// upload, one readback). Real wall time is measured end-to-end; the
     /// difference implied by `cpu_scale` is injected on `clock` so stressed
     /// or slower domains take proportionally longer on the timeline.
-    /// [`ChainTiming::per_layer`] is filled from cheap per-unit timestamps
-    /// (two `Instant::now()` calls per unit — nanoseconds against PJRT
-    /// execution cost), dilated by the same `cpu_scale`.
+    /// [`ChainTiming::per_layer`] is filled from cheap per-unit stopwatch
+    /// reads (nanoseconds against PJRT execution cost), dilated by the
+    /// same `cpu_scale`.
     pub fn run(&self, input: &Literal, clock: &Clock) -> Result<(Literal, ChainTiming)> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let (out, raw_per_layer) = self.run_raw_timed(input)?;
         let real = t0.elapsed();
         let scale = self.domain.cpu_scale().max(1e-3);
@@ -722,7 +728,7 @@ impl ChainExecutor {
             .map_err(|e| anyhow!("chain input upload: {e:?}"))?;
         let mut per_layer = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             buf = layer.run_buf(&buf)?;
             per_layer.push(t.elapsed());
         }
@@ -810,6 +816,25 @@ pub fn clone_literal(l: &Literal) -> Result<Literal> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn f32s_to_ne_bytes_round_trips() {
+        // Pure byte-level test (no PJRT): Miri-clean by construction, it
+        // pins the safe conversion that replaced the old from_raw_parts
+        // cast in literal_from_f32.
+        let data = [0.0f32, -1.5, f32::MIN_POSITIVE, f32::MAX, f32::NEG_INFINITY];
+        let bytes = f32s_to_ne_bytes(&data);
+        assert_eq!(bytes.len(), data.len() * 4);
+        for (i, v) in data.iter().enumerate() {
+            let mut word = [0u8; 4];
+            word.copy_from_slice(&bytes[i * 4..i * 4 + 4]);
+            assert_eq!(f32::from_ne_bytes(word), *v);
+        }
+        assert!(f32s_to_ne_bytes(&[]).is_empty());
+        // NaN survives as a bit pattern even though NaN != NaN.
+        let nan_bytes = f32s_to_ne_bytes(&[f32::NAN]);
+        assert_eq!(nan_bytes, f32::NAN.to_ne_bytes());
+    }
 
     #[test]
     fn build_options_defaults() {

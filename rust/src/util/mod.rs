@@ -3,6 +3,7 @@
 //! `serde_json`, `rand`, and the statistics half of `criterion`.
 
 pub mod json;
+pub mod model;
 pub mod prng;
 pub mod stats;
 pub mod sync;

@@ -7,7 +7,10 @@
 //! stay internally consistent at every await point, so recovery is
 //! always safe: take the guard out of the `PoisonError` and carry on.
 
-use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+use std::time::Duration;
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -24,10 +27,26 @@ pub fn write_clean<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
     l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// [`Condvar::wait_timeout_while`] with poison recovery — the condvar
+/// counterpart of [`lock_clean`] for guards parked on a notification.
+pub fn wait_timeout_while_clean<'a, T, F>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+    condition: F,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult)
+where
+    F: FnMut(&mut T) -> bool,
+{
+    cv.wait_timeout_while(guard, timeout, condition)
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::{Arc, Mutex, RwLock};
+    use std::sync::{Arc, Condvar, Mutex, RwLock};
+    use std::time::Duration;
 
     #[test]
     fn lock_clean_recovers_from_poison() {
@@ -44,6 +63,27 @@ mod tests {
         *g += 1;
         drop(g);
         assert_eq!(*lock_clean(&m), 8);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_from_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = pair2.0.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(pair.0.is_poisoned());
+        let guard = lock_clean(&pair.0);
+        let (g, timed_out) = wait_timeout_while_clean(
+            &pair.1,
+            guard,
+            Duration::from_millis(5),
+            |ready| !*ready,
+        );
+        assert!(timed_out.timed_out());
+        assert!(!*g);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! The lint pass, end to end: the real tree must be clean, and every
+//! fixture under rust/lint_fixtures/ must trip exactly the rule it is
+//! named for. This is the executable contract for `neukonfig_lint` —
+//! CI runs the binary, but these tests pin the per-rule behaviour.
+
+use std::path::{Path, PathBuf};
+
+use neukonfig::lint::{lint_source, lint_tree, Finding, LintConfig, Rule};
+
+fn repo(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn lint_fixture(rel: &str) -> Vec<Finding> {
+    let path = repo(rel);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    lint_source(&path, &src, &LintConfig::default())
+}
+
+fn rules(findings: &[Finding]) -> Vec<Rule> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+/// The committed source tree holds every invariant — the same check
+/// `cargo run --bin neukonfig_lint` performs in CI.
+#[test]
+fn source_tree_is_clean() {
+    let findings = lint_tree(&repo("rust/src"), &LintConfig::default())
+        .expect("walking rust/src");
+    assert!(
+        findings.is_empty(),
+        "rust/src has lint violations:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn bare_lock_fixture_trips_three_ways() {
+    let f = lint_fixture("rust/lint_fixtures/bare_lock.rs");
+    assert_eq!(rules(&f), vec![Rule::BareLock; 3], "{f:?}");
+    // The split `.lock()\n.unwrap()` chain is caught and anchored at the
+    // `.lock()` line — the whitespace-insensitive matcher's whole point.
+    let split = &f[1];
+    assert!(split.snippet.contains(".lock()"), "{split}");
+}
+
+#[test]
+fn wall_clock_fixture_trips_but_not_in_strings_or_comments() {
+    let f = lint_fixture("rust/lint_fixtures/wall_clock.rs");
+    assert_eq!(rules(&f), vec![Rule::WallClock, Rule::WallClock], "{f:?}");
+}
+
+#[test]
+fn unsafe_fixture_trips_block_and_fn() {
+    let f = lint_fixture("rust/lint_fixtures/unsafe_code.rs");
+    assert_eq!(rules(&f), vec![Rule::UnsafeCode, Rule::UnsafeCode], "{f:?}");
+}
+
+#[test]
+fn unsafe_allowlist_requires_safety_comment_too() {
+    let path = repo("rust/lint_fixtures/unsafe_code.rs");
+    let src = std::fs::read_to_string(&path).unwrap();
+    let cfg = LintConfig {
+        unsafe_allowlist: vec!["lint_fixtures/unsafe_code.rs".into()],
+        ..LintConfig::default()
+    };
+    let f = lint_source(&path, &src, &cfg);
+    // Allowlisting the file waives the SAFETY-commented block but NOT the
+    // uncommented `unsafe fn`.
+    assert_eq!(rules(&f), vec![Rule::UnsafeCode], "{f:?}");
+    assert!(f[0].snippet.contains("raw_write"), "{}", f[0]);
+}
+
+#[test]
+fn unbounded_channel_fixture_trips_in_coordinator_scope() {
+    let f = lint_fixture("rust/lint_fixtures/coordinator/unbounded_channel.rs");
+    assert_eq!(
+        rules(&f),
+        vec![Rule::UnboundedChannel, Rule::UnboundedChannel],
+        "{f:?}"
+    );
+}
+
+#[test]
+fn unbounded_channel_out_of_scope_is_ignored() {
+    // Same source, path without a coordinator/ component: rule is scoped.
+    let src =
+        std::fs::read_to_string(repo("rust/lint_fixtures/coordinator/unbounded_channel.rs"))
+            .unwrap();
+    let f = lint_source(Path::new("rust/lint_fixtures/elsewhere.rs"), &src, &LintConfig::default());
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn raw_sleep_fixture_trips() {
+    let f = lint_fixture("rust/lint_fixtures/raw_sleep.rs");
+    assert_eq!(rules(&f), vec![Rule::RawSleep], "{f:?}");
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    // Covers the poison-recovering lock idiom, the allow-marker waiver,
+    // bounded channels, and the cfg(test) exemption in one file.
+    let f = lint_fixture("rust/lint_fixtures/clean.rs");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn every_fixture_exit_status_matches_binary_contract() {
+    // The binary exits nonzero iff findings are non-empty; mirror that
+    // mapping over every fixture so the CI commands stay honest.
+    let expect_dirty = [
+        "rust/lint_fixtures/bare_lock.rs",
+        "rust/lint_fixtures/wall_clock.rs",
+        "rust/lint_fixtures/unsafe_code.rs",
+        "rust/lint_fixtures/raw_sleep.rs",
+        "rust/lint_fixtures/coordinator/unbounded_channel.rs",
+    ];
+    for rel in expect_dirty {
+        assert!(!lint_fixture(rel).is_empty(), "{rel} should trip its rule");
+    }
+    assert!(lint_fixture("rust/lint_fixtures/clean.rs").is_empty());
+}
+
+#[test]
+fn findings_are_ordered_by_line() {
+    let f = lint_fixture("rust/lint_fixtures/bare_lock.rs");
+    let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+    let mut sorted = lines.clone();
+    sorted.sort_unstable();
+    assert_eq!(lines, sorted);
+}
